@@ -1,0 +1,84 @@
+"""Assemble EXPERIMENTS.md §Dry-run/§Roofline tables + §Perf ledger from
+the cached dry-run JSONs.  Narrative sections live in the template below;
+tables are regenerated on every run so the document always matches
+results/dryrun/.
+
+    PYTHONPATH=src python -m benchmarks.make_experiments > EXPERIMENTS.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from .roofline import dryrun_table, load_records, markdown_table
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/dryrun")
+
+
+def perf_ledger() -> str:
+    """§Perf before/after table from tagged result files."""
+    cells = [
+        ("qwen2-72b", "decode_32k", "pod16x16",
+         ["", "kv8", "wstationary", "kv8+wstat"]),
+        ("granite-34b", "decode_32k", "pod16x16", ["", "kv8+wstat"]),
+        ("arctic-480b", "train_4k", "pod16x16",
+         ["", "cap10", "bf16accum", "group4k", "composed"]),
+        ("arctic-480b", "train_4k", "pod2x16x16",
+         ["", "cap10", "bf16accum", "group4k", "composed", "zero-pod",
+          "zero-pod-int8opt", "zero-pod-int8-ga8", "zero-pod-fit"]),
+        ("whisper-base", "train_4k", "pod16x16",
+         ["", "pure-dp", "dp-ce-sharded", "dp-no-remat"]),
+        ("mamba2-2.7b", "train_4k", "pod16x16",
+         ["", "chunk128", "chunk512"]),
+    ]
+    lines = [
+        "| cell | variant | compute (ms) | memory (ms) | collective (ms) |"
+        " bound (ms) | peak GB | Δbound vs baseline |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch, shape, mesh, tags in cells:
+        base_bound = None
+        for tag in tags:
+            suffix = f"__{tag}" if tag else ""
+            path = os.path.join(RESULTS_DIR,
+                                f"{arch}__{shape}__{mesh}{suffix}.json")
+            if not os.path.exists(path):
+                continue
+            r = json.load(open(path))
+            label = tag or "baseline"
+            if r.get("status") != "ok" or "roofline" not in r:
+                if r.get("status") == "ok":
+                    # multi-pod runs carry no analysis; report memory only
+                    pk = r["memory"]["peak_bytes_per_device"] / 2**30
+                    lines.append(f"| {arch}/{shape}@{mesh} | {label} | — |"
+                                 f" — | — | — | {pk:.2f} | — |")
+                continue
+            rl = r["roofline"]
+            bound = max(rl["compute_s"], rl["memory_s"],
+                        rl["collective_s"]) * 1e3
+            if base_bound is None:
+                base_bound = bound
+            pk = r["memory"]["peak_bytes_per_device"] / 2**30
+            lines.append(
+                f"| {arch}/{shape}@{mesh} | {label} "
+                f"| {rl['compute_s']*1e3:.2f} | {rl['memory_s']*1e3:.2f} "
+                f"| {rl['collective_s']*1e3:.2f} | {bound:.2f} "
+                f"| {pk:.2f} | {base_bound/bound:.2f}x |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    tmpl_path = os.path.join(os.path.dirname(__file__),
+                             "experiments_template.md")
+    with open(tmpl_path) as f:
+        tmpl = f.read()
+    out = tmpl.replace("<!--DRYRUN_TABLE-->", dryrun_table())
+    out = out.replace("<!--ROOFLINE_TABLE-->", markdown_table("pod16x16"))
+    out = out.replace("<!--PERF_LEDGER-->", perf_ledger())
+    sys.stdout.write(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,290 @@
+"""Reproductions of the paper's tables/figures on the MVE model stack.
+
+Each function mirrors one table/figure and returns rows of
+(name, value, derived) that benchmarks/run.py prints as CSV.  Energy uses
+an explicit component model (constants below, documented in
+EXPERIMENTS.md): the paper's qualitative claims — large energy wins from
+instruction-count reduction + SRAM-local compute — are what we validate,
+not the absolute joules.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core import MVEConfig, MVEInterpreter, cost, rvv
+from repro.core.cost import GPUModel, NeonModel, TimingParams
+from repro.core.isa import DType, Op
+from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET
+
+# --- energy constants (pJ) --------------------------------------------------
+# In-SRAM computing: energy per array per active cycle (two wordline
+# activations + peripheral logic, Neural-Cache-scale, 7nm).
+E_ARRAY_CYCLE = 8.0
+# L2 data movement per byte (incl. TMU transpose write).
+E_L2_BYTE = 8.0       # in-situ L2->TMU path (no core round trip)
+# MVE instruction issue/dispatch through the controller.
+E_ISSUE = 50.0
+# OoO mobile core: per scalar instruction / per 128-bit SIMD op.
+E_SCALAR = 150.0
+E_SIMD_OP = 250.0
+E_L1_BYTE = 25.0      # L1+L2+register-file round trip per byte
+# GPU: per int-MAC flop + fixed launch + copy per byte.
+E_GPU_FLOP = 2.5
+E_GPU_LAUNCH = 2.0e7
+E_GPU_COPY_BYTE = 30.0
+
+FREQ = 2.8  # GHz
+
+
+def _mve_run(name: str, cfg: MVEConfig | None = None, **kw):
+    cfg = cfg or MVEConfig()
+    run = PATTERNS[name](**kw)
+    interp = MVEInterpreter(cfg)
+    mem_after, state = interp.run(run.program, run.memory)
+    run.check(np.asarray(mem_after), state)      # every bench re-validates
+    tl = cost.simulate(state.trace, cfg)
+    return run, state, tl
+
+
+def _mve_energy_pj(tl: cost.Timeline, cfg: MVEConfig,
+                   mem_bytes: float) -> float:
+    compute = tl.compute_cycles * cfg.num_arrays * E_ARRAY_CYCLE
+    data = mem_bytes * E_L2_BYTE
+    issue = (tl.vector_instructions + tl.config_instructions) * E_ISSUE
+    scalar = tl.scalar_instructions * E_SCALAR
+    return compute + data + issue + scalar
+
+
+def _neon_energy_pj(neon_cycles: float, work) -> float:
+    simd_ops = work.vector_ops * work.elements / (128 // work.bits)
+    scalar = simd_ops * 0.5                     # loop/address overhead
+    return (simd_ops * E_SIMD_OP + scalar * E_SCALAR +
+            work.mem_bytes * E_L1_BYTE)
+
+
+# ---------------------------------------------------------------------------
+# Table II — bit-serial op latencies
+# ---------------------------------------------------------------------------
+
+def table2_latencies() -> List[Tuple[str, float, str]]:
+    cfg = MVEConfig()
+    rows = []
+    for op, formula in [(Op.ADD, "n"), (Op.SUB, "2n"),
+                        (Op.MUL, "n^2+5n"), (Op.MIN, "2n"),
+                        (Op.XOR, "n"), (Op.SHI, "n"),
+                        (Op.SHR, "n*log2(n)"), (Op.CPY, "n")]:
+        for dt in (DType.B, DType.W, DType.DW):
+            cyc = cost.compute_cycles(op, dt, cfg)
+            rows.append((f"table2/{op.value}_{dt.suffix}",
+                         cyc / (FREQ * 1e3), f"{cyc:.0f}cyc[{formula}]"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 7 — MVE vs Arm Neon (speedup + energy per library)
+# ---------------------------------------------------------------------------
+
+def fig7_neon() -> List[Tuple[str, float, str]]:
+    neon = NeonModel()
+    cfg = MVEConfig()
+    rows, speedups, eratios = [], [], []
+    breakdowns = []
+    for name in sorted(PATTERNS):
+        run, state, tl = _mve_run(name)
+        w = run.neon
+        n_cyc = neon.kernel_cycles(w.vector_ops, w.elements, w.bits,
+                                   w.mem_bytes)
+        mve_us = tl.us(FREQ)
+        neon_us = n_cyc / (FREQ * 1e3)
+        sp = neon_us / mve_us
+        e_mve = _mve_energy_pj(tl, cfg, cost.data_bytes(state.trace))
+        e_neon = _neon_energy_pj(n_cyc, w)
+        er = e_neon / e_mve
+        speedups.append(sp)
+        eratios.append(er)
+        breakdowns.append(cost.breakdown(tl))
+        rows.append((f"fig7/{run.library}/{name}", mve_us,
+                     f"speedup_vs_neon={sp:.2f}x;energy={er:.2f}x"))
+    geo = float(np.exp(np.mean(np.log(speedups))))
+    geo_e = float(np.exp(np.mean(np.log(eratios))))
+    bd = {k: float(np.mean([b[k] for b in breakdowns]))
+          for k in ("idle", "compute", "data")}
+    rows.append(("fig7/average", 0.0,
+                 f"speedup={geo:.2f}x[paper:2.9x];"
+                 f"energy={geo_e:.2f}x[paper:8.8x];"
+                 f"idle={bd['idle']:.2f}[0.40];"
+                 f"compute={bd['compute']:.2f}[0.25];"
+                 f"data={bd['data']:.2f}[0.35]"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 8/9 — MVE vs mobile GPU (launch overhead + crossover sweep)
+# ---------------------------------------------------------------------------
+
+def fig8_gpu() -> List[Tuple[str, float, str]]:
+    gpu = GPUModel()
+    cfg = MVEConfig()
+    rows, ratios = [], []
+    for name in ("gemm", "spmm", "fir", "daxpy", "audio_mix"):
+        run, state, tl = _mve_run(name)
+        mve_us = tl.us(FREQ)
+        gpu_us = gpu.kernel_us(run.flops, run.copy_bytes)
+        ratios.append(gpu_us / mve_us)
+        e_mve = _mve_energy_pj(tl, cfg, cost.data_bytes(state.trace))
+        e_gpu = (run.flops * E_GPU_FLOP + E_GPU_LAUNCH +
+                 run.copy_bytes * E_GPU_COPY_BYTE)
+        rows.append((f"fig8/{name}", mve_us,
+                     f"gpu_time_ratio={gpu_us/mve_us:.2f}x;"
+                     f"gpu_energy_ratio={e_gpu/e_mve:.2f}x"))
+    geo = float(np.exp(np.mean(np.log(ratios))))
+    rows.append(("fig8/average", 0.0, f"speedup={geo:.2f}x[paper:9.3x]"))
+    return rows
+
+
+def fig9_gemm_sweep() -> List[Tuple[str, float, str]]:
+    """Crossover: GPU wins only at large matrix sizes (paper: ~6 MFLOP,
+    measured on quantized CNN GEMMs — we use the int16 variant)."""
+    gpu = GPUModel()
+    rows = []
+    crossover = None
+    for m, k in ((64, 16), (128, 32), (256, 64), (512, 64),
+                 (512, 128), (1024, 128)):
+        run, state, tl = _mve_run("gemm", n_rows=min(m, 1024),
+                                  k=k, m=64, dtype=DType.W)
+        mve_us = tl.us(FREQ)
+        gpu_us = gpu.kernel_us(run.flops, run.copy_bytes)
+        if gpu_us < mve_us and crossover is None:
+            crossover = run.flops
+        rows.append((f"fig9/gemm_{m}x{k}", mve_us,
+                     f"flops={run.flops:.0f};gpu_us={gpu_us:.1f};"
+                     f"mve_wins={gpu_us > mve_us}"))
+    rows.append(("fig9/crossover", 0.0,
+                 f"gpu_wins_above_flops={crossover}[paper:~6.0e6]"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figures 10/11 — MVE vs RVV on the same bit-serial engine
+# ---------------------------------------------------------------------------
+
+def fig10_11_rvv() -> List[Tuple[str, float, str]]:
+    cfg = MVEConfig()
+    rows, speedups, vratios, sratios = [], [], [], []
+    for name in RVV_COMPARISON_SET:
+        run, state, tl = _mve_run(name)
+        trace, stats = rvv.compile_to_rvv(run.program)
+        tl_rvv = cost.simulate(trace, cfg)
+        ms = rvv.mve_stats(run.program)
+        sp = tl_rvv.total_cycles / tl.total_cycles
+        vr = stats.vector_instructions / max(ms.vector_instructions, 1)
+        sr = max(stats.scalar_instructions, 1) / \
+            max(ms.scalar_instructions, 1)
+        speedups.append(sp)
+        vratios.append(vr)
+        sratios.append(sr)
+        rows.append((f"fig10/{name}", tl.us(FREQ),
+                     f"speedup={sp:.2f}x;vinstr_ratio={vr:.1f}x;"
+                     f"scalar_ratio={sr:.1f}x"))
+    rows.append(("fig10/average", 0.0,
+                 f"speedup={np.exp(np.mean(np.log(speedups))):.2f}x"
+                 f"[paper:2.0x-3.8x];"
+                 f"vinstr={np.exp(np.mean(np.log(vratios))):.2f}x"
+                 f"[paper:2.3x];"
+                 f"scalar={np.exp(np.mean(np.log(sratios))):.2f}x"
+                 f"[paper:2.0x]"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 12(b) — scalability with SRAM array count
+# ---------------------------------------------------------------------------
+
+def fig12b_scaling() -> List[Tuple[str, float, str]]:
+    """Strong scaling: fixed workload, engine grows 8->64 SRAM arrays
+    (the kernels tile their loops to the engine's lane count)."""
+    rows = []
+    for name, kw in (("gemm", dict(n_rows=256, k=16, m=64)),
+                     ("spmm", dict(rows=128, cols=64, m=64))):
+        base_us = None
+        for arrays in (8, 16, 32, 64):
+            cfg = MVEConfig(num_arrays=arrays)
+            run, state, tl = _mve_run(name, cfg=cfg,
+                                      lanes=cfg.lanes, **kw)
+            us = tl.us(FREQ)
+            if arrays == 8:
+                base_us = us
+            rows.append((f"fig12b/{name}_sa{arrays}", us,
+                         f"speedup_vs_sa8={base_us/us:.2f}x"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 12(c) — sensitivity to bit precision
+# ---------------------------------------------------------------------------
+
+def fig12c_precision() -> List[Tuple[str, float, str]]:
+    """Quadratic BS scaling vs linear Neon scaling with precision."""
+    cfg = MVEConfig()
+    neon = NeonModel()
+    rows = []
+    for dt in (DType.B, DType.W, DType.DW):
+        n = dt.bits
+        mul = cost.compute_cycles(Op.MUL, dt, cfg)
+        add = cost.compute_cycles(Op.ADD, dt, cfg)
+        neon_rel = n / 8.0                     # linear packing
+        bs_rel = mul / cost.compute_cycles(Op.MUL, DType.B, cfg)
+        rows.append((f"fig12c/int{n}", mul / (FREQ * 1e3),
+                     f"bs_mul_rel={bs_rel:.1f}x;neon_rel={neon_rel:.1f}x;"
+                     f"add={add:.0f}cyc"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Figure 13 — in-SRAM computing schemes (BS/BP/BH/AC) under MVE vs RVV
+# ---------------------------------------------------------------------------
+
+def fig13_schemes() -> List[Tuple[str, float, str]]:
+    rows = []
+    paper = {"bs": 3.8, "bh": 2.8, "bp": 1.8, "ac": 2.0}
+    for scheme in ("bs", "bh", "bp", "ac"):
+        cfg = MVEConfig(scheme=scheme)
+        speedups, mu, ru = [], [], []
+        for name in RVV_COMPARISON_SET:
+            run, state, tl = _mve_run(name, cfg=cfg)
+            trace, _ = rvv.compile_to_rvv(run.program, cfg)
+            tl_rvv = cost.simulate(trace, cfg)
+            speedups.append(tl_rvv.total_cycles / tl.total_cycles)
+            mu.append(tl.lane_utilization)
+            ru.append(tl_rvv.lane_utilization)
+        geo = float(np.exp(np.mean(np.log(speedups))))
+        rows.append((f"fig13/{scheme}", 0.0,
+                     f"mve_vs_rvv={geo:.2f}x[paper:{paper[scheme]}x];"
+                     f"util_mve={np.mean(mu):.2f};"
+                     f"util_rvv={np.mean(ru):.2f}"))
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# Table V — area overhead
+# ---------------------------------------------------------------------------
+
+def tableV_area() -> List[Tuple[str, float, str]]:
+    """Component areas (mm^2, 7nm) from the paper's sources; the derived
+    claim is the 3.6% total overhead vs the 16.3% of a Neon datapath."""
+    core = 1.07
+    comps = {
+        "controller": 0.0043, "mshr": 0.0018, "tmu": 0.0053,
+        "xb": 0.0039, "fsm": 0.0123, "peripheral": 0.0063,
+        "addr_decoder": 0.0042,
+    }
+    rows = [(f"tableV/{k}", v, f"{v/core*100:.3f}%")
+            for k, v in comps.items()]
+    total = sum(comps.values())
+    rows.append(("tableV/total", total,
+                 f"{total/core*100:.2f}%[paper:3.588%]"))
+    rows.append(("tableV/neon", 0.1741,
+                 f"{0.1741/core*100:.2f}%[paper:16.321%]"))
+    return rows

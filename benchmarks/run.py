@@ -1,0 +1,60 @@
+"""Benchmark runner: one section per paper table/figure + kernel bench +
+the roofline table from the dry-run artifacts.
+
+    PYTHONPATH=src python -m benchmarks.run [--only fig7,fig10]
+
+Prints ``name,us_per_call,derived`` CSV.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import paper_claims
+from .kernels_bench import kernel_microbench
+from .roofline import roofline_rows
+from .serving_bench import serving_throughput
+
+SECTIONS = {
+    "table2": paper_claims.table2_latencies,
+    "fig7": paper_claims.fig7_neon,
+    "fig8": paper_claims.fig8_gpu,
+    "fig9": paper_claims.fig9_gemm_sweep,
+    "fig10": paper_claims.fig10_11_rvv,
+    "fig12b": paper_claims.fig12b_scaling,
+    "fig12c": paper_claims.fig12c_precision,
+    "fig13": paper_claims.fig13_schemes,
+    "tableV": paper_claims.tableV_area,
+    "kernels": kernel_microbench,
+    "serving": serving_throughput,
+    "roofline": roofline_rows,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated section names")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for section, fn in SECTIONS.items():
+        if only and section not in only:
+            continue
+        try:
+            for name, us, derived in fn():
+                print(f"{name},{us:.3f},{derived}")
+        except Exception as e:                    # keep the run going
+            failures += 1
+            print(f"{section}/ERROR,0,{type(e).__name__}:{e}",
+                  file=sys.stdout)
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

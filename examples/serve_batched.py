@@ -1,0 +1,62 @@
+"""End-to-end serving driver (the paper-kind e2e example).
+
+Trains a small LM briefly, then serves a stream of batched requests
+through the continuous-batching engine whose slot management is the MVE
+dimension-level mask (one mask bit per request, Section III-E).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.configs.base import ShapeCell
+from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.launch.train import TrainLoopConfig, train_loop
+from repro.models import LM
+from repro.optim import AdamWConfig
+
+
+def main():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_layers=2)
+
+    print("== quick training pass (synthetic data) ==")
+    metrics = train_loop(
+        cfg, ShapeCell("serve-demo", 64, 4, "train"),
+        TrainLoopConfig(steps=30, log_every=10),
+        opt_cfg=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=30))
+    print(f"final train loss: {metrics['loss']:.3f}")
+
+    print("\n== continuous batching ==")
+    model = LM(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = ContinuousBatchingEngine(cfg, params, batch_slots=4,
+                                      max_seq=48)
+    rng = np.random.default_rng(0)
+    t0 = time.time()
+    for i in range(10):
+        ln = int(rng.integers(2, 8))
+        engine.submit(Request(
+            rid=i, prompt=rng.integers(1, cfg.vocab_size, ln)
+            .astype(np.int32), max_new_tokens=int(rng.integers(2, 6))))
+    done = engine.run_until_drained()
+    dt = time.time() - t0
+
+    n_tokens = sum(len(r.output) for r in done.values())
+    print(f"completed {len(done)} requests, {n_tokens} tokens "
+          f"in {dt:.1f}s")
+    for rid in sorted(done):
+        r = done[rid]
+        ttft = (r.first_token_at - r.submitted_at)
+        print(f"  req {rid}: prompt={len(r.prompt)} out={r.output} "
+              f"ttft={ttft*1e3:.0f}ms")
+    print(f"peak slot occupancy used the MVE mask CR: "
+          f"{engine.grid.top} slots")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpointing substrate."""
+from .store import (CheckpointManager, load_checkpoint,  # noqa: F401
+                    reshard_tree, save_checkpoint)

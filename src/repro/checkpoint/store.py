@@ -1,0 +1,173 @@
+"""Fault-tolerant checkpoint store.
+
+Features a production trainer needs on a 1000-node cluster, implemented
+host-side (single-controller semantics; each leaf is fetched to host and
+written as .npy with a JSON manifest):
+
+  * atomic commits (write to tmp dir, fsync, rename) — a preempted writer
+    never corrupts the latest checkpoint;
+  * async saves on a background thread so the train loop keeps stepping;
+  * resharding restore: a checkpoint written on one mesh can be loaded
+    onto any other mesh/topology (elastic scaling) — leaves are stored
+    unsharded and re-device_put with the new sharding;
+  * retention policy + emergency ("preemption") saves;
+  * step/data-position metadata for exact training resume.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+_SEP = "/"
+
+
+def _flatten_with_paths(tree) -> List[Tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = _SEP.join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        out.append((key, leaf))
+    return out
+
+
+def save_checkpoint(directory: str, step: int, tree,
+                    metadata: Optional[Dict] = None) -> str:
+    """Atomic synchronous save; returns the committed path."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    manifest = {"step": step, "metadata": metadata or {}, "leaves": []}
+    for key, leaf in _flatten_with_paths(tree):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = key.replace(_SEP, "__") + ".npy"
+        logical_dtype = str(arr.dtype)
+        if arr.dtype.kind == "V" or logical_dtype in (
+                "bfloat16", "float8_e4m3fn", "float8_e5m2"):
+            # numpy can't serialize ml_dtypes natively: store raw bytes
+            arr = arr.view(np.uint8 if arr.dtype.itemsize == 1
+                           else np.uint16)
+        np.save(os.path.join(tmp, fname), arr)
+        manifest["leaves"].append(
+            {"key": key, "file": fname, "shape": list(arr.shape),
+             "dtype": logical_dtype})
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+def latest_step(directory: str) -> Optional[int]:
+    if not os.path.isdir(directory):
+        return None
+    steps = [int(d.split("_")[1]) for d in os.listdir(directory)
+             if d.startswith("step_") and not d.endswith(".tmp")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(directory: str, template,
+                    step: Optional[int] = None,
+                    shardings=None) -> Tuple[Any, Dict]:
+    """Restore into the structure of ``template``.
+
+    ``shardings``: optional pytree of NamedSharding (same structure) —
+    leaves are device_put with them, which is how a checkpoint written on
+    a 256-chip mesh restores onto 512 chips (or 1 CPU).
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    by_key = {l["key"]: l for l in manifest["leaves"]}
+    flat = _flatten_with_paths(template)
+    shard_flat = ([s for _, s in _flatten_with_paths(shardings)]
+                  if shardings is not None else [None] * len(flat))
+    leaves = []
+    for (key, tmpl), shard in zip(flat, shard_flat):
+        entry = by_key[key]
+        arr = np.load(os.path.join(path, entry["file"]))
+        logical = entry["dtype"]
+        if str(arr.dtype) != logical:          # byte-viewed ml_dtypes
+            import ml_dtypes
+            arr = arr.view(np.dtype(getattr(ml_dtypes, logical)))
+        if tuple(arr.shape) != tuple(np.shape(tmpl)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs "
+                f"template {np.shape(tmpl)}")
+        if shard is not None:
+            leaves.append(jax.device_put(arr, shard))
+        else:
+            leaves.append(jax.numpy.asarray(arr))
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, leaves), manifest["metadata"]
+
+
+def reshard_tree(tree, shardings):
+    """Re-device_put a live tree with new shardings (elastic re-mesh)."""
+    return jax.tree.map(
+        lambda x, s: jax.device_put(np.asarray(jax.device_get(x)), s),
+        tree, shardings)
+
+
+class CheckpointManager:
+    """Async saves + retention + emergency save hook."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree, metadata=None) -> None:
+        self.wait()
+        host_tree = jax.tree.map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+
+        def work():
+            try:
+                save_checkpoint(self.directory, step, host_tree, metadata)
+                self._gc()
+            except BaseException as e:      # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def save_emergency(self, step: int, tree, metadata=None) -> str:
+        """Synchronous, used from preemption signal handlers."""
+        self.wait()
+        meta = dict(metadata or {})
+        meta["emergency"] = True
+        return save_checkpoint(self.directory, step, tree, meta)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.directory)
+            if d.startswith("step_") and not d.endswith(".tmp"))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)

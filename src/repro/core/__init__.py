@@ -1,0 +1,14 @@
+"""MVE core: the paper's contribution as a composable module.
+
+Layers:
+  isa      — instruction set (Table II), stride modes, intrinsics
+  machine  — cache geometry, control registers, lane flattening
+  interp   — functional executor (the semantic oracle)
+  cost     — BS/BP/BH/AC cycle models + controller/CB timeline
+  rvv      — 1D long-vector baseline lowering (Figures 10/11/13)
+  patterns — Section IV data-parallel patterns for 12 mobile libraries
+  packing  — the MVE lane/masking abstraction reused by the LM framework
+"""
+from . import cost, interp, isa, machine, packing, patterns, rvv  # noqa: F401
+from .interp import MVEInterpreter  # noqa: F401
+from .machine import MVEConfig  # noqa: F401

@@ -1,0 +1,296 @@
+"""Functional executor for MVE programs.
+
+This is the *semantic oracle* for the ISA: registers are JAX arrays of shape
+``(lanes,)``; memory is a flat JAX array addressed in elements.  Multi-dim
+strided loads implement Algorithm 1, random loads implement Equation 1, and
+dimension-level masking follows Section III-E (masked lanes retain their old
+destination value; masked stores are dropped).
+
+The interpreter also produces an execution *trace* consumed by the cost
+models in :mod:`repro.core.cost` — this mirrors the paper's methodology of
+a trace-driven cycle-accurate simulator fed by a functional intrinsic
+library (Section VI).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .isa import DType, Instr, Op
+from .machine import (ControlState, MVEConfig, cbs_touched, flatten_indices,
+                      lane_dim_mask)
+
+# Byte data in the mobile kernels (pixels, characters) is unsigned; wider
+# integer types model the signed variants (the ISA has both, Section III-F).
+_JNP_DTYPE = {
+    DType.B: jnp.uint8,
+    DType.W: jnp.int16,
+    DType.DW: jnp.int32,
+    DType.QW: jnp.int64,
+    DType.HF: jnp.float16,
+    DType.F: jnp.float32,
+}
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One executed instruction with everything the cost model needs."""
+
+    op: Op
+    dtype: Optional[DType]
+    elements: int              # active elements (post dimension mask)
+    cb_mask: np.ndarray        # which CBs participate
+    segments: int = 1          # distinct contiguous runs in memory
+    scalar_count: int = 0
+    contiguous_run: int = 1    # elements per contiguous run
+    unique_elements: int = 1   # memory words actually touched (stride-0
+                               # replication is free through the crossbar)
+    lines: int = 1             # exact 64B cache lines touched
+
+
+def _touched_lines(addr: np.ndarray, mask: np.ndarray,
+                   nbytes: int) -> int:
+    """Exact 64-byte cache lines covered by a masked address stream."""
+    if not mask.any():
+        return 0
+    return int(np.unique((addr[mask] * nbytes) // 64).size)
+
+
+@dataclasses.dataclass
+class MachineState:
+    memory: jnp.ndarray
+    regs: Dict[int, jnp.ndarray]
+    tag: jnp.ndarray           # per-lane predicate latch (T)
+    ctrl: ControlState
+    trace: List[TraceEvent]
+
+
+class MVEInterpreter:
+    """Executes an MVE program on a software model of the in-cache engine."""
+
+    def __init__(self, config: MVEConfig | None = None):
+        self.cfg = config or MVEConfig()
+
+    # -- public API --------------------------------------------------------
+    def run(self, program: isa.Program, memory: jnp.ndarray,
+            ) -> Tuple[jnp.ndarray, MachineState]:
+        state = MachineState(
+            memory=jnp.asarray(memory),
+            regs={},
+            tag=jnp.ones(self.cfg.lanes, dtype=bool),
+            ctrl=ControlState(),
+            trace=[],
+        )
+        for instr in program:
+            self._step(instr, state)
+        return state.memory, state
+
+    # -- helpers -----------------------------------------------------------
+    def _addresses(self, state: MachineState, modes: Tuple[int, ...],
+                   base: int, store: bool, random_base: bool
+                   ) -> Tuple[np.ndarray, np.ndarray, int]:
+        """Per-lane element addresses + active mask for a memory access.
+
+        For random accesses (Eq. 1) the highest dimension indexes a pointer
+        array at ``base``; lower dimensions use the resolved strides shifted
+        down by one (the paper's S_[3:1] become the inner strides).
+        """
+        ctrl = state.ctrl
+        dims = ctrl.active_dims()
+        strides = ctrl.resolve_strides(modes, store)
+        coords = flatten_indices(dims, self.cfg.lanes)
+        mask = lane_dim_mask(dims, ctrl.dim_mask, self.cfg.lanes)
+
+        if random_base:
+            # Fetch base pointers from memory: one per highest-dim element.
+            top_len = dims[-1]
+            ptrs = np.asarray(
+                state.memory[base: base + top_len]).astype(np.int64)
+            top_idx = np.clip(coords[:, len(dims) - 1], 0, top_len - 1)
+            addr = ptrs[top_idx]
+            for d in range(len(dims) - 1):
+                addr = addr + np.where(coords[:, d] >= 0,
+                                       coords[:, d], 0) * strides[d]
+        else:
+            addr = np.full(self.cfg.lanes, base, dtype=np.int64)
+            for d in range(len(dims)):
+                addr = addr + np.where(coords[:, d] >= 0,
+                                       coords[:, d], 0) * strides[d]
+
+        # Trace metadata (cost model): stride-0 dims are replication (free
+        # through the TMU crossbar); among the rest, runs grow while each
+        # stride equals the current dense run size (mode-2 "derived"
+        # accesses collapse to a single contiguous run).
+        nz = sorted((s, ln) for ln, s in zip(dims, strides) if s != 0)
+        run, segments, unique = 1, 1, 1
+        for s, ln in nz:
+            unique *= ln
+            if s == run:
+                run *= ln
+            else:
+                segments *= ln
+        return addr, mask, run, segments, min(unique, self.cfg.lanes)
+
+    def _step(self, instr: Instr, state: MachineState) -> None:
+        op = instr.op
+        cfg = self.cfg
+        ctrl = state.ctrl
+
+        # ---- config ------------------------------------------------------
+        if op is Op.SET_DIMC:
+            ctrl.dim_count = instr.imm
+            return self._trace_config(instr, state)
+        if op is Op.SET_DIML:
+            # The mask CR only covers the first MAX_TOP_DIM elements of the
+            # highest dimension (Section III-E); longer highest dims are
+            # legal but can only be dimension-masked on that prefix.
+            ctrl.dim_lens[instr.dim] = instr.length
+            return self._trace_config(instr, state)
+        if op is Op.SET_LDSTR:
+            ctrl.ld_strides[instr.dim] = instr.stride
+            return self._trace_config(instr, state)
+        if op is Op.SET_STSTR:
+            ctrl.st_strides[instr.dim] = instr.stride
+            return self._trace_config(instr, state)
+        if op is Op.SET_MASK:
+            ctrl.dim_mask[instr.mask_index] = True
+            return self._trace_config(instr, state)
+        if op is Op.UNSET_MASK:
+            ctrl.dim_mask[instr.mask_index] = False
+            return self._trace_config(instr, state)
+        if op is Op.SET_WIDTH:
+            ctrl.kernel_width = instr.imm
+            return self._trace_config(instr, state)
+        if op is Op.SCALAR:
+            state.trace.append(TraceEvent(
+                op=op, dtype=None, elements=0,
+                cb_mask=np.zeros(cfg.num_cbs, dtype=bool),
+                scalar_count=instr.scalar_count))
+            return None
+
+        dims = ctrl.active_dims()
+        mask = lane_dim_mask(dims, ctrl.dim_mask, cfg.lanes)
+        jmask = jnp.asarray(mask)
+        cbm = cbs_touched(dims, ctrl.dim_mask, cfg)
+        elements = int(mask.sum())
+        dt = _JNP_DTYPE.get(instr.dtype, jnp.float32)
+
+        def old(vd):
+            return state.regs.get(
+                vd, jnp.zeros(cfg.lanes, dtype=dt)).astype(dt)
+
+        # ---- memory ------------------------------------------------------
+        if op in (Op.SLD, Op.RLD):
+            addr, amask, run, segs, uniq = self._addresses(
+                state, instr.modes or (), instr.base,
+                store=False, random_base=(op is Op.RLD))
+            lines = _touched_lines(addr, amask, instr.dtype.nbytes)
+            gathered = state.memory[jnp.asarray(
+                np.clip(addr, 0, state.memory.shape[0] - 1))].astype(dt)
+            state.regs[instr.vd] = jnp.where(jnp.asarray(amask), gathered,
+                                             old(instr.vd))
+            state.trace.append(TraceEvent(op, instr.dtype, elements, cbm,
+                                          segments=segs,
+                                          contiguous_run=run,
+                                          unique_elements=uniq,
+                                          lines=lines))
+            return None
+        if op in (Op.SST, Op.RST):
+            addr, amask, run, segs, uniq = self._addresses(
+                state, instr.modes or (), instr.base,
+                store=True, random_base=(op is Op.RST))
+            lines = _touched_lines(addr, amask, instr.dtype.nbytes)
+            src = old(instr.vs1)
+            # Drop masked lanes; later lanes win on address collisions
+            # (well-defined scatter order, matches a sequential loop).
+            idx = jnp.asarray(np.where(amask, addr, -1))
+            valid = idx >= 0
+            safe_idx = jnp.where(valid, idx, 0)
+            mem_dt = state.memory.dtype
+            update = jnp.where(valid, src.astype(mem_dt),
+                               state.memory[safe_idx])
+            state.memory = state.memory.at[safe_idx].set(update)
+            state.trace.append(TraceEvent(op, instr.dtype, elements, cbm,
+                                          segments=segs,
+                                          contiguous_run=run,
+                                          unique_elements=uniq,
+                                          lines=lines))
+            return None
+
+        # ---- moves & arithmetic -------------------------------------------
+        def finish(result):
+            result = result.astype(dt)
+            prev = old(instr.vd)
+            keep = jmask
+            if instr.predicated:
+                keep = keep & state.tag
+            state.regs[instr.vd] = jnp.where(keep, result, prev)
+            state.trace.append(TraceEvent(op, instr.dtype, elements, cbm))
+
+        if op is Op.SET_DUP:
+            return finish(jnp.full(cfg.lanes, instr.imm, dtype=dt))
+        if op is Op.CPY:
+            return finish(old(instr.vs1))
+        if op is Op.CVT:
+            src = state.regs.get(instr.vs1,
+                                 jnp.zeros(cfg.lanes, dtype=jnp.float32))
+            return finish(src.astype(dt))
+
+        a = state.regs.get(instr.vs1, jnp.zeros(cfg.lanes, dtype=dt)).astype(dt)
+        if instr.vs2 is not None:
+            b = state.regs.get(instr.vs2,
+                               jnp.zeros(cfg.lanes, dtype=dt)).astype(dt)
+        else:
+            b = None
+
+        if op is Op.ADD:
+            return finish(a + b)
+        if op is Op.SUB:
+            return finish(a - b)
+        if op is Op.MUL:
+            return finish(a * b)
+        if op is Op.MIN:
+            return finish(jnp.minimum(a, b))
+        if op is Op.MAX:
+            return finish(jnp.maximum(a, b))
+        if op is Op.XOR:
+            return finish(a ^ b)
+        if op is Op.AND:
+            return finish(a & b)
+        if op is Op.OR:
+            return finish(a | b)
+        if op is Op.SHI:
+            if instr.dtype.is_float:
+                raise ValueError("shift on float register")
+            amt = instr.imm
+            return finish(a << amt if amt >= 0 else a >> (-amt))
+        if op is Op.ROTI:
+            bits = instr.dtype.bits
+            amt = instr.imm % bits
+            ua = a.astype(jnp.uint32 if bits <= 32 else jnp.uint64)
+            return finish(((ua << amt) | (ua >> (bits - amt))).astype(dt))
+        if op is Op.SHR:
+            return finish(a << b.astype(jnp.int32))
+        if op in isa.COMPARE_OPS:
+            cmp = {Op.GT: a > b, Op.GTE: a >= b, Op.LT: a < b,
+                   Op.LTE: a <= b, Op.EQ: a == b, Op.NEQ: a != b}[op]
+            state.tag = jnp.where(jmask, cmp, state.tag)
+            state.trace.append(TraceEvent(op, instr.dtype, elements, cbm))
+            return None
+
+        raise NotImplementedError(f"op {op}")
+
+    def _trace_config(self, instr: Instr, state: MachineState) -> None:
+        state.trace.append(TraceEvent(
+            op=instr.op, dtype=None, elements=0,
+            cb_mask=np.zeros(self.cfg.num_cbs, dtype=bool)))
+
+
+def read_register(state: MachineState, reg: int, n: Optional[int] = None):
+    """Test helper: dense values of the first ``n`` lanes of ``reg``."""
+    v = state.regs[reg]
+    return np.asarray(v if n is None else v[:n])

@@ -1,0 +1,272 @@
+"""MVE instruction set architecture definitions.
+
+Faithful encoding of the ISA in Section III of
+
+    "Multi-Dimensional Vector ISA Extension for Mobile In-Cache Computing"
+    (Khadem, Fujiki, Chen, Gu, Talati, Mahlke, Das — 2025)
+
+The ISA treats in-cache physical registers (8K bit-serial SIMD lanes) as
+up-to-4-dimensional *logical* registers ``PR[w][z][y][x]`` and provides
+
+  * multi-dimensional strided loads/stores (Algorithm 1 of the paper),
+  * random-base + strided-offset loads/stores (Equation 1),
+  * dimension-level masking over the highest dimension,
+  * the 29 operations of Table II for 6 data types.
+
+Stride encoding uses the paper's 2-bit *stride mode* per dimension:
+
+  mode 0 -> stride 0   (replication)
+  mode 1 -> stride 1   (sequential)
+  mode 2 -> derived    S_i = S_{i-1} * Dim_{i-1}.Length   (S_{-1} = 1)
+  mode 3 -> value taken from the per-dimension stride control register
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional, Sequence, Tuple
+
+MAX_DIMS = 4
+# Paper Section III-E: the highest dimension is capped at 256 so the mask CR
+# stays one bit per element of the outermost loop.
+MAX_TOP_DIM = 256
+
+
+class DType(enum.Enum):
+    """MVE data types (paper Section III-F)."""
+
+    # name, bits, float?
+    B = ("b", 8, False)       # 8-bit integer
+    W = ("w", 16, False)      # 16-bit integer
+    DW = ("dw", 32, False)    # 32-bit integer
+    QW = ("qw", 64, False)    # 64-bit integer
+    HF = ("hf", 16, True)     # half float
+    F = ("f", 32, True)       # single float
+
+    def __init__(self, suffix: str, bits: int, is_float: bool):
+        self.suffix = suffix
+        self.bits = bits
+        self.is_float = is_float
+
+    @property
+    def nbytes(self) -> int:
+        return self.bits // 8
+
+
+class StrideMode(enum.IntEnum):
+    ZERO = 0      # replicate
+    ONE = 1       # sequential
+    DERIVED = 2   # S_i = S_{i-1} * L_{i-1}
+    CR = 3        # use stride control register
+
+
+class Op(enum.Enum):
+    """Operation kinds of Table II."""
+
+    # Config
+    SET_DIMC = "vsetdimc"
+    SET_DIML = "vsetdiml"
+    SET_MASK = "vsetmask"
+    UNSET_MASK = "vunsetmask"
+    SET_WIDTH = "vsetwidth"
+    SET_LDSTR = "vsetldstr"   # load stride CR
+    SET_STSTR = "vsetststr"   # store stride CR
+    # Move
+    CVT = "vcvt"
+    CPY = "vcpy"
+    # Memory
+    SLD = "vsld"
+    RLD = "vrld"
+    SST = "vsst"
+    RST = "vrst"
+    # Arithmetic
+    SET_DUP = "vsetdup"
+    SHI = "vshi"      # shift immediate (constant shift)
+    ROTI = "vroti"
+    SHR = "vshr"      # shift by register (variable shift)
+    ADD = "vadd"
+    SUB = "vsub"
+    MUL = "vmul"
+    MIN = "vmin"
+    MAX = "vmax"
+    XOR = "vxor"
+    AND = "vand"
+    OR = "vor"
+    GT = "vgt"
+    GTE = "vgte"
+    LT = "vlt"
+    LTE = "vlte"
+    EQ = "veq"
+    NEQ = "vneq"
+    # VM-level pseudo op to account for interleaved scalar work in the
+    # trace-driven cost model (the real binary interleaves scalar insts).
+    SCALAR = "scalar"
+
+
+CONFIG_OPS = {Op.SET_DIMC, Op.SET_DIML, Op.SET_MASK, Op.UNSET_MASK,
+              Op.SET_WIDTH, Op.SET_LDSTR, Op.SET_STSTR}
+MEMORY_OPS = {Op.SLD, Op.RLD, Op.SST, Op.RST}
+COMPARE_OPS = {Op.GT, Op.GTE, Op.LT, Op.LTE, Op.EQ, Op.NEQ}
+ARITH_OPS = {Op.SET_DUP, Op.SHI, Op.ROTI, Op.SHR, Op.ADD, Op.SUB, Op.MUL,
+             Op.MIN, Op.MAX, Op.XOR, Op.AND, Op.OR} | COMPARE_OPS
+MOVE_OPS = {Op.CVT, Op.CPY}
+VECTOR_OPS = MEMORY_OPS | ARITH_OPS | MOVE_OPS
+
+
+@dataclasses.dataclass(frozen=True)
+class Instr:
+    """One MVE instruction.
+
+    ``vd``/``vs1``/``vs2`` name virtual vector registers (ints).  Memory
+    instructions carry the base address and the per-dimension stride modes;
+    config instructions carry immediates.  ``scalar_count`` is used only by
+    ``Op.SCALAR`` pseudo-instructions.
+    """
+
+    op: Op
+    dtype: Optional[DType] = None
+    vd: Optional[int] = None
+    vs1: Optional[int] = None
+    vs2: Optional[int] = None
+    imm: Optional[int] = None
+    base: Optional[int] = None                 # element address in VM memory
+    modes: Optional[Tuple[int, ...]] = None    # per-dim stride modes
+    dim: Optional[int] = None                  # for vsetdiml / vset*str
+    length: Optional[int] = None               # for vsetdiml
+    stride: Optional[int] = None               # for vset*str
+    mask_index: Optional[int] = None           # for v(un)setmask
+    predicated: bool = False                   # execute under Tag latch
+    scalar_count: int = 0
+
+    def is_vector(self) -> bool:
+        return self.op in VECTOR_OPS
+
+    def is_memory(self) -> bool:
+        return self.op in MEMORY_OPS
+
+    def is_config(self) -> bool:
+        return self.op in CONFIG_OPS
+
+
+# ---------------------------------------------------------------------------
+# Convenience constructors (mirror the intrinsics library of Section III-F).
+# ---------------------------------------------------------------------------
+
+def vsetdimc(count: int) -> Instr:
+    if not (1 <= count <= MAX_DIMS):
+        raise ValueError(f"dim count must be in [1,{MAX_DIMS}], got {count}")
+    return Instr(Op.SET_DIMC, imm=count)
+
+
+def vsetdiml(dim: int, length: int) -> Instr:
+    if length < 1:
+        raise ValueError("dim length must be >= 1")
+    return Instr(Op.SET_DIML, dim=dim, length=length)
+
+
+def vsetldstr(dim: int, stride: int) -> Instr:
+    return Instr(Op.SET_LDSTR, dim=dim, stride=stride)
+
+
+def vsetststr(dim: int, stride: int) -> Instr:
+    return Instr(Op.SET_STSTR, dim=dim, stride=stride)
+
+
+def vsetmask(index: int) -> Instr:
+    return Instr(Op.SET_MASK, mask_index=index)
+
+
+def vunsetmask(index: int) -> Instr:
+    return Instr(Op.UNSET_MASK, mask_index=index)
+
+
+def vsetwidth(bits: int) -> Instr:
+    return Instr(Op.SET_WIDTH, imm=bits)
+
+
+def vsld(dtype: DType, vd: int, base: int, *modes: int) -> Instr:
+    return Instr(Op.SLD, dtype=dtype, vd=vd, base=base, modes=tuple(modes))
+
+
+def vsst(dtype: DType, vs: int, base: int, *modes: int) -> Instr:
+    return Instr(Op.SST, dtype=dtype, vs1=vs, base=base, modes=tuple(modes))
+
+
+def vrld(dtype: DType, vd: int, ptr_base: int, *modes: int) -> Instr:
+    """Random load: ``ptr_base`` addresses an array of row base addresses."""
+    return Instr(Op.RLD, dtype=dtype, vd=vd, base=ptr_base, modes=tuple(modes))
+
+
+def vrst(dtype: DType, vs: int, ptr_base: int, *modes: int) -> Instr:
+    return Instr(Op.RST, dtype=dtype, vs1=vs, base=ptr_base, modes=tuple(modes))
+
+
+def vsetdup(dtype: DType, vd: int, value) -> Instr:
+    return Instr(Op.SET_DUP, dtype=dtype, vd=vd, imm=value)
+
+
+def vbinary(op: Op, dtype: DType, vd: int, vs1: int, vs2: int,
+            predicated: bool = False) -> Instr:
+    return Instr(op, dtype=dtype, vd=vd, vs1=vs1, vs2=vs2,
+                 predicated=predicated)
+
+
+def vadd(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.ADD, dtype, vd, vs1, vs2, **kw)
+
+
+def vsub(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.SUB, dtype, vd, vs1, vs2, **kw)
+
+
+def vmul(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.MUL, dtype, vd, vs1, vs2, **kw)
+
+
+def vmin(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.MIN, dtype, vd, vs1, vs2, **kw)
+
+
+def vmax(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.MAX, dtype, vd, vs1, vs2, **kw)
+
+
+def vxor(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.XOR, dtype, vd, vs1, vs2, **kw)
+
+
+def vand(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.AND, dtype, vd, vs1, vs2, **kw)
+
+
+def vor(dtype, vd, vs1, vs2, **kw):
+    return vbinary(Op.OR, dtype, vd, vs1, vs2, **kw)
+
+
+def vshi(dtype, vd, vs, amount: int) -> Instr:
+    return Instr(Op.SHI, dtype=dtype, vd=vd, vs1=vs, imm=amount)
+
+
+def vshr_reg(dtype, vd, vs1, vs2) -> Instr:
+    return Instr(Op.SHR, dtype=dtype, vd=vd, vs1=vs1, vs2=vs2)
+
+
+def vcmp(op: Op, dtype, vs1, vs2) -> Instr:
+    """Comparisons write the per-lane Tag latch (predicate)."""
+    return Instr(op, dtype=dtype, vs1=vs1, vs2=vs2)
+
+
+def vcpy(dtype, vd, vs) -> Instr:
+    return Instr(Op.CPY, dtype=dtype, vd=vd, vs1=vs)
+
+
+def vcvt(dst_dtype, vd, vs) -> Instr:
+    return Instr(Op.CVT, dtype=dst_dtype, vd=vd, vs1=vs)
+
+
+def scalar(count: int) -> Instr:
+    """``count`` interleaved scalar core instructions (cost model only)."""
+    return Instr(Op.SCALAR, scalar_count=count)
+
+
+Program = Sequence[Instr]

@@ -1,0 +1,161 @@
+"""MVE machine geometry and controller state.
+
+Models the cache architecture of Section V: a 256 KB L2 slice repurposed as
+32 compute-capable 8 KB SRAM arrays.  Each array has 256 bitlines; data
+elements are transposed onto bitlines (Neural Cache layout), so every bitline
+is one SIMD lane:
+
+    lanes = num_arrays * bitlines = 32 * 256 = 8192
+
+Arrays are grouped 4-per-Control-Block (CB); each CB has one FSM and can be
+masked off per-instruction by the dimension-level mask (Section V-B).
+
+A physical register (PR) occupies ``width`` wordlines out of 256, so the
+number of live PRs is ``wordlines // width`` (Section III-B: constant vector
+length, *variable* register count).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Tuple
+
+import numpy as np
+
+from .isa import MAX_DIMS, MAX_TOP_DIM
+
+
+@dataclasses.dataclass(frozen=True)
+class MVEConfig:
+    """Geometry + compute-scheme knobs (Table IV `MVE` row by default)."""
+
+    num_arrays: int = 32          # 4 cache ways x 8 arrays
+    bitlines: int = 256           # SIMD lanes per array
+    wordlines: int = 256          # bits of register file per lane
+    arrays_per_cb: int = 4        # Section V-B (Duality-Cache granularity)
+    scheme: str = "bs"            # bs | bp | bh | ac
+    bh_segment_bits: int = 4      # EVE segment width for the bh scheme
+    freq_ghz: float = 2.8         # clocked with the core (Table IV)
+
+    @property
+    def lanes(self) -> int:
+        return self.num_arrays * self.bitlines
+
+    @property
+    def num_cbs(self) -> int:
+        return self.num_arrays // self.arrays_per_cb
+
+    @property
+    def lanes_per_cb(self) -> int:
+        return self.bitlines * self.arrays_per_cb
+
+    def num_physical_registers(self, width_bits: int) -> int:
+        """Variable register count: 256 wordlines / live register width."""
+        return self.wordlines // max(width_bits, 1)
+
+    def effective_lanes(self, width_bits: int) -> int:
+        """SIMD lanes available under each compute scheme (Section II-B).
+
+        bs: every bitline is a lane.
+        bp: n-bit data lies horizontally -> 8K/n lanes (VRAM).
+        bh: p-bit segments lie horizontally -> 8K/p lanes (EVE).
+        ac: bit-slices lie horizontally across arrays; lanes = wordlines x
+            arrays/bits ~= 8K/ (bits/arrays)... CAPE keeps 8K-element tiles,
+            we model the same lane count as bs (latency differs).
+        """
+        if self.scheme == "bs":
+            return self.lanes
+        if self.scheme == "bp":
+            return self.lanes // max(width_bits, 1)
+        if self.scheme == "bh":
+            return self.lanes // max(self.bh_segment_bits, 1)
+        if self.scheme == "ac":
+            return self.lanes
+        raise ValueError(f"unknown scheme {self.scheme!r}")
+
+
+@dataclasses.dataclass
+class ControlState:
+    """The controller CRs (Section III-B / V-B)."""
+
+    dim_count: int = 1
+    dim_lens: List[int] = dataclasses.field(
+        default_factory=lambda: [1] * MAX_DIMS)
+    ld_strides: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * MAX_DIMS)
+    st_strides: List[int] = dataclasses.field(
+        default_factory=lambda: [0] * MAX_DIMS)
+    # one mask bit per element of the highest dimension (max 256)
+    dim_mask: np.ndarray = dataclasses.field(
+        default_factory=lambda: np.ones(MAX_TOP_DIM, dtype=bool))
+    kernel_width: int = 32
+
+    def active_dims(self) -> Tuple[int, ...]:
+        return tuple(self.dim_lens[: self.dim_count])
+
+    def active_elements(self) -> int:
+        return int(np.prod(self.active_dims()))
+
+    def resolve_strides(self, modes: Tuple[int, ...], store: bool
+                        ) -> Tuple[int, ...]:
+        """Resolve 2-bit stride modes to absolute strides (Section III-C).
+
+        mode 2 derives S_i = S_{i-1} * L_{i-1} with S_{-1} = 1, which is the
+        "dense row-major continuation" stride.
+        """
+        crs = self.st_strides if store else self.ld_strides
+        strides = []
+        prev = 1
+        for d in range(self.dim_count):
+            mode = modes[d] if d < len(modes) else 1
+            if mode == 0:
+                s = 0
+            elif mode == 1:
+                s = 1
+            elif mode == 2:
+                prev_len = self.dim_lens[d - 1] if d > 0 else 1
+                s = (strides[d - 1] if d > 0 else 1) * prev_len
+            elif mode == 3:
+                s = crs[d]
+            else:
+                raise ValueError(f"bad stride mode {mode}")
+            strides.append(s)
+            prev = s
+        return tuple(strides)
+
+
+def flatten_indices(dims: Tuple[int, ...], lanes: int) -> np.ndarray:
+    """Map lane id -> multi-dim logical index, x fastest (Figure 5).
+
+    Returns an int array of shape (lanes, len(dims)); lanes beyond
+    prod(dims) are marked inactive with -1 in every coordinate.
+    """
+    total = int(np.prod(dims))
+    lane = np.arange(lanes, dtype=np.int64)
+    coords = np.full((lanes, len(dims)), -1, dtype=np.int64)
+    active = lane < total
+    rem = np.where(active, lane, 0)
+    for d, length in enumerate(dims):       # d=0 is x (fastest)
+        coords[:, d] = np.where(active, rem % length, -1)
+        rem = rem // length
+    return coords
+
+
+def lane_dim_mask(dims: Tuple[int, ...], dim_mask: np.ndarray,
+                  lanes: int) -> np.ndarray:
+    """Expand the highest-dimension mask CR to a per-lane boolean mask."""
+    coords = flatten_indices(dims, lanes)
+    top = coords[:, len(dims) - 1]
+    active = top >= 0
+    top_clipped = np.clip(top, 0, len(dim_mask) - 1)
+    return active & dim_mask[top_clipped]
+
+
+def cbs_touched(dims: Tuple[int, ...], dim_mask: np.ndarray,
+                cfg: MVEConfig) -> np.ndarray:
+    """Which control blocks have at least one active lane (mask bit-vector
+
+    the controller keeps per instruction, Section V-B)."""
+    lm = lane_dim_mask(dims, dim_mask, cfg.lanes)
+    per_cb = lm.reshape(cfg.num_cbs, cfg.lanes_per_cb)
+    return per_cb.any(axis=1)

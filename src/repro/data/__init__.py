@@ -1,0 +1,3 @@
+"""Data pipeline substrate."""
+from .pipeline import (DataConfig, SyntheticTextSource,  # noqa: F401
+                       make_train_batches, shard_for_host)

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+  mdgather      — MVE vsld multi-dim strided gather (TMU/crossbar -> VMEM
+                  tile + iota-arithmetic adaptation)
+  mdscatter     — MVE vsst multi-dim strided scatter (store-side TMU)
+  bitplane_gemm — bit-serial -> bit-plane int GEMM on the MXU
+  flash_attention — online-softmax attention forward
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jit'd
+dispatch wrappers the models call.
+"""
+from . import ops, ref  # noqa: F401

@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: multi-dimensional strided gather (MVE ``vsld``).
+
+Hardware adaptation (see DESIGN.md): in the paper, the MVE controller walks
+Algorithm-1 addresses through the MSHRs, and a Transpose Memory Unit +
+crossbar route words onto bitlines.  On TPU the analogous structure is a
+grid of DMA-fed VMEM tiles whose *index arithmetic* (not data) encodes the
+multi-dimensional access:
+
+  * lane blocks (8 x 128, one VREG tile) play the role of a CB's bitlines;
+  * the per-lane address computation is vectorized iota arithmetic — the
+    TMU/crossbar becomes an in-register gather from a VMEM-resident source
+    tile;
+  * stride-0 dimensions (replication) are *free* at the register level,
+    exactly the paper's motivation for encoding them in the ISA.
+
+The source array must fit in VMEM for this kernel (the ops.py wrapper falls
+back to the XLA gather for larger sources and documents the tiling
+strategy for an HBM-resident variant).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANE_TILE = (8, 128)   # sublanes x lanes of one TPU vector register
+
+
+def _gather_kernel(dims: Tuple[int, ...], strides: Tuple[int, ...],
+                   base: int, total: int,
+                   src_ref, out_ref):
+    """One grid step fills one (8,128) lane tile of the output."""
+    tile = pl.program_id(0)
+    rows, cols = LANE_TILE
+    lane0 = tile * rows * cols
+    # lane ids of this tile, shaped (8, 128)
+    lane = (lane0
+            + jax.lax.broadcasted_iota(jnp.int32, LANE_TILE, 0) * cols
+            + jax.lax.broadcasted_iota(jnp.int32, LANE_TILE, 1))
+    addr = jnp.full(LANE_TILE, base, dtype=jnp.int32)
+    rem = lane
+    for length, stride in zip(dims, strides):
+        idx = rem % length
+        rem = rem // length
+        addr = addr + idx * stride
+    # lanes beyond prod(dims) are inactive -> clamp and zero-fill
+    active = lane < total
+    addr = jnp.where(active, addr, 0)
+    vals = src_ref[addr.reshape(-1)].reshape(LANE_TILE)
+    out_ref[...] = jnp.where(active, vals, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dims", "strides", "base", "interpret"))
+def mdgather(src: jnp.ndarray, dims: Tuple[int, ...],
+             strides: Tuple[int, ...], base: int = 0,
+             interpret: bool = True) -> jnp.ndarray:
+    """Gather ``prod(dims)`` elements of flat ``src`` per Algorithm 1.
+
+    Returns a flat (padded to lane-tile multiple) vector; callers slice
+    ``[:prod(dims)]``.
+    """
+    total = int(np.prod(dims))
+    rows, cols = LANE_TILE
+    tile_elems = rows * cols
+    n_tiles = -(-total // tile_elems)
+    out_shape = jax.ShapeDtypeStruct((n_tiles * rows, cols), src.dtype)
+
+    kernel = functools.partial(_gather_kernel, tuple(dims), tuple(strides),
+                               base, total)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_tiles,),
+        in_specs=[pl.BlockSpec(src.shape, lambda i: (0,) * src.ndim)],
+        out_specs=pl.BlockSpec(LANE_TILE, lambda i: (i, 0)),
+        out_shape=out_shape,
+        interpret=interpret,
+    )(src)
+    return out.reshape(-1)[:total]

@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: multi-dimensional strided scatter (MVE ``vsst``).
+
+The store-side counterpart of :mod:`repro.kernels.mdgather`: lane values
+are written back to Algorithm-1 addresses.  Collisions (stride-0 output
+dims) follow the interpreter's last-lane-wins semantics; the oracle is
+:func:`repro.kernels.ref.mdscatter_ref`.
+
+The destination tile is VMEM-resident per grid step (input_output_alias
+keeps it in place); lanes are streamed in (8,128) tiles like the gather.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+LANE_TILE = (8, 128)
+
+
+def _scatter_kernel(dims: Tuple[int, ...], strides: Tuple[int, ...],
+                    base: int, total: int, n_tiles: int,
+                    values_ref, dst_in_ref, dst_ref):
+    """Single grid step: walk every lane tile in order (sequential, so
+    later lanes win on address collisions)."""
+    dst_ref[...] = dst_in_ref[...]
+    rows, cols = LANE_TILE
+
+    def tile_body(tile, _):
+        lane0 = tile * rows * cols
+        lane = (lane0
+                + jax.lax.broadcasted_iota(jnp.int32, LANE_TILE, 0) * cols
+                + jax.lax.broadcasted_iota(jnp.int32, LANE_TILE, 1))
+        addr = jnp.full(LANE_TILE, base, dtype=jnp.int32)
+        rem = lane
+        for length, stride in zip(dims, strides):
+            idx = rem % length
+            rem = rem // length
+            addr = addr + idx * stride
+        active = (lane < total).reshape(-1)
+        # inactive lanes write into the trash slot the wrapper appended —
+        # masking them with a read-modify-write would race the active
+        # lanes' updates inside the same vector scatter
+        trash = dst_ref.shape[0] - 1
+        flat_addr = jnp.where(active, addr.reshape(-1), trash)
+        vals = values_ref[pl.ds(tile * rows, rows), :].reshape(-1)
+        dst_ref[flat_addr] = vals
+        return 0
+
+    jax.lax.fori_loop(0, n_tiles, tile_body, 0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("dims", "strides", "base", "interpret"))
+def mdscatter(dst: jnp.ndarray, values: jnp.ndarray,
+              dims: Tuple[int, ...], strides: Tuple[int, ...],
+              base: int = 0, interpret: bool = True) -> jnp.ndarray:
+    """Scatter ``prod(dims)`` lane values into flat ``dst``."""
+    total = int(np.prod(dims))
+    rows, cols = LANE_TILE
+    tile_elems = rows * cols
+    n_tiles = -(-total // tile_elems)
+    pad = n_tiles * tile_elems - values.shape[0]
+    vals = jnp.pad(values, (0, max(pad, 0)))[: n_tiles * tile_elems]
+    vals = vals.reshape(n_tiles * rows, cols).astype(dst.dtype)
+
+    dst_pad = jnp.pad(dst, (0, 1))               # trash slot for masked lanes
+    kernel = functools.partial(_scatter_kernel, tuple(dims),
+                               tuple(strides), base, total, n_tiles)
+    out = pl.pallas_call(
+        kernel,
+        grid=(),
+        in_specs=[pl.BlockSpec(vals.shape, lambda: (0, 0)),
+                  pl.BlockSpec(dst_pad.shape, lambda: (0,))],
+        out_specs=pl.BlockSpec(dst_pad.shape, lambda: (0,)),
+        out_shape=jax.ShapeDtypeStruct(dst_pad.shape, dst.dtype),
+        interpret=interpret,
+    )(vals, dst_pad)
+    return out[:-1]

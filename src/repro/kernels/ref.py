@@ -1,0 +1,106 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the Pallas kernels must match them bit-for-bit
+(integer kernels) or to numerical tolerance (float kernels).  Tests sweep
+shapes/dtypes and ``assert_allclose`` kernel-vs-oracle in interpret mode.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Multi-dimensional strided gather/scatter (the MVE vsld/vsst data path).
+# ---------------------------------------------------------------------------
+
+def mdv_lane_addresses(dims: Sequence[int], strides: Sequence[int],
+                       base: int, lanes: int) -> jnp.ndarray:
+    """Per-lane flat source addresses per Algorithm 1 (x fastest)."""
+    lane = jnp.arange(lanes, dtype=jnp.int32)
+    addr = jnp.full((lanes,), base, dtype=jnp.int32)
+    rem = lane
+    for d, (length, stride) in enumerate(zip(dims, strides)):
+        idx = rem % length
+        rem = rem // length
+        addr = addr + idx * stride
+    return addr
+
+
+def mdgather_ref(src: jnp.ndarray, dims: Sequence[int],
+                 strides: Sequence[int], base: int = 0) -> jnp.ndarray:
+    """Gather ``prod(dims)`` lanes from flat ``src``; Algorithm 1."""
+    lanes = int(np.prod(dims))
+    addr = mdv_lane_addresses(dims, strides, base, lanes)
+    return src[addr]
+
+
+def mdscatter_ref(dst: jnp.ndarray, values: jnp.ndarray,
+                  dims: Sequence[int], strides: Sequence[int],
+                  base: int = 0) -> jnp.ndarray:
+    lanes = int(np.prod(dims))
+    addr = mdv_lane_addresses(dims, strides, base, lanes)
+    return dst.at[addr].set(values[:lanes])
+
+
+# ---------------------------------------------------------------------------
+# Bit-plane (bit-serial adapted) quantized matmul.
+# ---------------------------------------------------------------------------
+
+def int8_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """int8 x int8 -> int32 exact matmul."""
+    return jnp.dot(x.astype(jnp.int32), w.astype(jnp.int32),
+                   preferred_element_type=jnp.int32)
+
+
+def bitplane_matmul_ref(x: jnp.ndarray, w: jnp.ndarray) -> jnp.ndarray:
+    """Same result computed plane-by-plane — the oracle mirrors the
+    bit-serial decomposition so tests validate the *algorithm*, not just
+    the final kernel: w = -128*b7 + sum_{b<7} 2^b * b_b (two's complement).
+    """
+    xi = x.astype(jnp.int32)
+    wu = w.astype(jnp.int32) & 0xFF
+    acc = jnp.zeros((x.shape[0], w.shape[1]), jnp.int32)
+    for b in range(8):
+        plane = (wu >> b) & 1
+        partial = jnp.dot(xi, plane, preferred_element_type=jnp.int32)
+        acc = acc + (partial << b) * (-1 if b == 7 else 1)
+    return acc
+
+
+def quantize_rowwise_ref(x: jnp.ndarray
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Symmetric per-row int8 quantization (used by serving + gradient
+    compression)."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0
+    scale = jnp.where(scale == 0, 1.0, scale)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Flash attention (forward) — online softmax over kv blocks.
+# ---------------------------------------------------------------------------
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                        causal: bool = True,
+                        scale: float | None = None) -> jnp.ndarray:
+    """Naive reference: (B, H, Sq, D) x (B, H, Sk, D) -> (B, H, Sq, D).
+
+    fp32 softmax; this is the oracle for both the Pallas kernel and the
+    chunked-attention path used inside the models.
+    """
+    *_, sq, d = q.shape
+    sk = k.shape[-2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(d)
+    logits = jnp.einsum("...qd,...kd->...qk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("...qk,...kd->...qd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)

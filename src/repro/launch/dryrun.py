@@ -1,0 +1,258 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape)
+on the production meshes and extract the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen2-72b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--both-meshes]
+
+Methodology note (documented in EXPERIMENTS.md §Dry-run): XLA's
+``cost_analysis`` counts a ``while`` (scan) body ONCE, so flops/bytes/
+collective-bytes are measured by compiling the model at 1 and 2 layer
+*units* and extrapolating ``c1 + (units-1) * (c2 - c1)``; the inner
+attention/cross-entropy chunk scans are set to trip-count 1 for those
+analysis compiles.  Peak memory and the compile proof come from the
+full-depth compile with production chunking.
+
+Results are cached as JSON under results/dryrun/.  The XLA_FLAGS line
+above MUST run before any jax import (device count locks at first init).
+"""
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict, Optional, Tuple  # noqa: E402
+
+import jax           # noqa: E402
+
+from ..configs import ARCH_IDS, SHAPES, cell_supported, get_config  # noqa: E402
+from ..parallel.axes import sharding_context  # noqa: E402
+from . import hlo_analysis  # noqa: E402
+from .mesh import make_production_mesh  # noqa: E402
+from .steps import jitted_cell  # noqa: E402
+
+RESULTS_DIR = os.environ.get("REPRO_RESULTS", "results/dryrun")
+
+# Gradient accumulation per arch for the train_4k cell, chosen so the
+# per-device peak fits a 16 GB v5e HBM (see EXPERIMENTS.md §Dry-run).
+TRAIN_GRAD_ACCUM = {
+    "qwen2-72b": 4,
+    "granite-34b": 4,
+    "arctic-480b": 4,
+    "nemotron-4-15b": 2,
+    "llama4-scout-17b-a16e": 8,
+    "llama-3.2-vision-11b": 2,
+    "zamba2-2.7b": 4,
+}
+
+
+def result_path(arch: str, shape: str, multi_pod: bool,
+                tag: str = "") -> str:
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    suffix = f"__{tag}" if tag else ""
+    return os.path.join(RESULTS_DIR,
+                        f"{arch}__{shape}__{mesh_name}{suffix}.json")
+
+
+def layer_plan(cfg) -> Tuple[Dict, Dict, int]:
+    """(unit-1 overrides, unit-2 overrides, #units) for extrapolation."""
+    fam = cfg.family
+    if fam == "encdec":
+        return ({"num_layers": 1, "encoder_layers": 1},
+                {"num_layers": 2, "encoder_layers": 2}, cfg.num_layers)
+    if fam == "vlm":
+        e = cfg.cross_attn_every
+        return ({"num_layers": e}, {"num_layers": 2 * e},
+                cfg.num_layers // e)
+    if fam == "hybrid":
+        e = cfg.attn_every
+        return ({"num_layers": e}, {"num_layers": 2 * e},
+                cfg.num_layers // e)
+    return ({"num_layers": 1}, {"num_layers": 2}, cfg.num_layers)
+
+
+def _compile_once(cfg, cell, multi_pod: bool, rules=None,
+                  opt_overrides=None):
+    from ..optim import AdamWConfig
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    from ..parallel.axes import DEFAULT_RULES
+    merged = dict(DEFAULT_RULES)
+    if rules:
+        merged.update(rules)
+    opt_cfg = AdamWConfig(**opt_overrides) if opt_overrides else None
+    with sharding_context(mesh, merged) as ctx:
+        step, abstract_args = jitted_cell(cfg, cell, ctx, opt_cfg=opt_cfg)
+        lowered = step.lower(*abstract_args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = hlo_analysis.collective_bytes(compiled.as_text())
+    return compiled, cost, coll, mesh.size
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool = False,
+             overrides: Optional[Dict] = None, tag: str = "",
+             force: bool = False, analysis: bool = True,
+             rule_overrides: Optional[Dict] = None,
+             opt_overrides: Optional[Dict] = None) -> Dict:
+    """Lower+compile one cell; returns (and caches) the analysis record."""
+    path = result_path(arch, shape, multi_pod, tag)
+    if not force and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if cell.kind == "train" and arch in TRAIN_GRAD_ACCUM:
+        cfg = dataclasses.replace(
+            cfg, grad_accum=TRAIN_GRAD_ACCUM[arch])
+    if overrides:
+        cfg = dataclasses.replace(cfg, **overrides)
+    ok, why = cell_supported(cfg, cell)
+    rec: Dict = {"arch": arch, "shape": shape,
+                 "mesh": "2x16x16" if multi_pod else "16x16", "tag": tag,
+                 "overrides": overrides or {},
+                 "rule_overrides": {k: list(v) for k, v in
+                                    (rule_overrides or {}).items()}}
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        _save(path, rec)
+        return rec
+
+    t0 = time.time()
+    try:
+        # 1) full-depth compile: the runnability proof + memory analysis
+        compiled, cost_full, coll_full, chips = _compile_once(
+            cfg, cell, multi_pod, rules=rule_overrides,
+            opt_overrides=opt_overrides)
+        mem = compiled.memory_analysis()
+        t_full = time.time() - t0
+        rec.update(
+            status="ok", chips=chips, compile_s=round(t_full, 2),
+            memory={
+                "argument_bytes": mem.argument_size_in_bytes,
+                "output_bytes": mem.output_size_in_bytes,
+                "temp_bytes": mem.temp_size_in_bytes,
+                "alias_bytes": mem.alias_size_in_bytes,
+                "peak_bytes_per_device":
+                    mem.argument_size_in_bytes +
+                    mem.output_size_in_bytes +
+                    mem.temp_size_in_bytes -
+                    mem.alias_size_in_bytes,
+            },
+            params=cfg.param_count(),
+            active_params=cfg.active_param_count(),
+            cost_raw={"flops": float(cost_full.get("flops", 0.0)),
+                      "bytes": float(cost_full.get("bytes accessed", 0.0)),
+                      "collectives": coll_full},
+        )
+
+        if analysis:
+            # 2) unit-extrapolated roofline terms
+            o1, o2, units = layer_plan(cfg)
+            # analysis compiles measure per-step totals at grad_accum=1
+            # (an accumulated step does the same work per token)
+            chunks = {"attn_chunk": cell.seq_len, "ce_chunk": cell.seq_len,
+                      "scan_unroll": True, "grad_accum": 1}
+            c1 = dataclasses.replace(cfg, **o1, **chunks)
+            c2 = dataclasses.replace(cfg, **o2, **chunks)
+            _, costa, colla, _ = _compile_once(
+                c1, cell, multi_pod, rules=rule_overrides,
+                opt_overrides=opt_overrides)
+            _, costb, collb, _ = _compile_once(
+                c2, cell, multi_pod, rules=rule_overrides,
+                opt_overrides=opt_overrides)
+
+            def extrap(a, b):
+                return a + (units - 1) * (b - a)
+
+            flops = extrap(float(costa.get("flops", 0.0)),
+                           float(costb.get("flops", 0.0)))
+            nbytes = extrap(float(costa.get("bytes accessed", 0.0)),
+                            float(costb.get("bytes accessed", 0.0)))
+            coll = {k: int(extrap(colla[k], collb[k])) for k in colla}
+            rl = hlo_analysis.Roofline(
+                flops_per_device=flops,
+                bytes_per_device=nbytes,
+                collective_bytes_per_device=float(coll["total"]),
+                chips=chips,
+                model_flops_total=hlo_analysis.model_flops(cfg, cell),
+            )
+            rec["collectives"] = coll
+            rec["roofline"] = rl.as_dict()
+            rec["extrapolation"] = {"units": units, "o1": o1, "o2": o2}
+        rec["total_s"] = round(time.time() - t0, 2)
+    except Exception as e:                      # record the failure
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   trace=traceback.format_exc()[-4000:])
+    _save(path, rec)
+    return rec
+
+
+def _save(path: str, rec: Dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-analysis", action="store_true",
+                    help="full compile only (multi-pod proof runs)")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        if not (args.arch and args.shape):
+            ap.error("--arch and --shape required unless --all")
+        cells = [(args.arch, args.shape)]
+
+    meshes = [args.multi_pod] if not args.both_meshes else [False, True]
+    for arch, shape in cells:
+        for mp in meshes:
+            # roofline analysis is single-pod only (per spec); multi-pod
+            # runs prove the 'pod' axis shards.
+            analysis = (not mp) and (not args.no_analysis)
+            rec = run_cell(arch, shape, multi_pod=mp, force=args.force,
+                           analysis=analysis)
+            status = rec["status"]
+            extra = ""
+            if status == "ok" and "roofline" in rec:
+                r = rec["roofline"]
+                extra = (f" dominant={r['dominant']}"
+                         f" compute={r['compute_s']*1e3:.2f}ms"
+                         f" memory={r['memory_s']*1e3:.2f}ms"
+                         f" coll={r['collective_s']*1e3:.2f}ms"
+                         f" useful={r['useful_flops_ratio']:.2f}"
+                         f" frac={r['roofline_fraction']:.3f}"
+                         f" peakGB="
+                         f"{rec['memory']['peak_bytes_per_device']/2**30:.2f}")
+            elif status == "ok":
+                extra = (f" peakGB="
+                         f"{rec['memory']['peak_bytes_per_device']/2**30:.2f}"
+                         f" compile={rec['compile_s']:.0f}s")
+            elif status == "error":
+                extra = " " + rec["error"].splitlines()[0]
+            elif status == "skipped":
+                extra = " (" + rec["reason"][:60] + ")"
+            print(f"[dryrun] {arch:24s} {shape:12s} "
+                  f"{'2x16x16' if mp else '16x16':8s} {status}{extra}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,143 @@
+"""Post-compile HLO analysis: collective bytes + roofline terms.
+
+``compiled.cost_analysis()`` gives per-device FLOPs and bytes-accessed but
+no collective traffic, so collective bytes are parsed from the compiled
+(partitioned, per-device) HLO text: for every all-gather / all-reduce /
+reduce-scatter / all-to-all / collective-permute op we sum the *result*
+shape bytes — the data each device materializes from the wire (a
+consistent, schedule-independent proxy; documented in EXPERIMENTS.md).
+
+Hardware model (TPU v5e-class, from the task spec):
+  197 TFLOP/s bf16 per chip, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SHAPE_RE = re.compile(r"\b([a-z]+[0-9]*)\[([0-9,]*)\]")
+_START_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(.*)$")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d.strip():
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-collective-kind result bytes in one device's module."""
+    out: Dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        kind = None
+        for k in _COLLECTIVES:
+            # match the op name, not fusion names: " all-reduce(" etc.
+            if f" {k}(" in line or f" {k}-start(" in line:
+                kind = k
+                break
+        if kind is None:
+            continue
+        m = _START_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(1)
+        # result type = shape tokens before the op name
+        op_pos = rhs.find(kind)
+        result_part = rhs[:op_pos]
+        total = 0
+        for dt, dims in _SHAPE_RE.findall(result_part):
+            total += _shape_bytes(dt, dims)
+        out[kind] += total
+    out["total"] = sum(out[k] for k in _COLLECTIVES)
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    chips: int
+    model_flops_total: float          # 6ND / 2ND convention
+
+    @property
+    def compute_s(self) -> float:
+        return self.flops_per_device / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.bytes_per_device / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.collective_bytes_per_device / ICI_BW
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / HLO_FLOPs — how much compiled compute is useful
+        (catches remat/redundancy waste)."""
+        per_dev = self.model_flops_total / self.chips
+        return per_dev / max(self.flops_per_device, 1.0)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Useful-FLOPs utilization at the modelled bound: the fraction of
+        peak the step achieves if it runs exactly at the dominant term."""
+        per_dev_useful = self.model_flops_total / self.chips
+        return per_dev_useful / (self.bound_s * PEAK_FLOPS)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops_per_device": self.flops_per_device,
+            "bytes_per_device": self.bytes_per_device,
+            "collective_bytes_per_device": self.collective_bytes_per_device,
+            "chips": self.chips,
+            "model_flops_total": self.model_flops_total,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "roofline_fraction": self.roofline_fraction,
+        }
+
+
+def model_flops(cfg, cell) -> float:
+    """6*N*D train / 2*N*D inference convention; N_active for MoE."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * cell.global_batch

@@ -1,0 +1,42 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is the
+DCN dimension — only data parallelism (gradient all-reduce) crosses it.
+
+Defined as functions (never module-level constants) so importing this
+module does not touch JAX device state.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"need {need} devices for mesh {shape}, have {len(devices)}; "
+            "the dry-run entrypoint must set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "any jax import")
+    grid = np.asarray(devices[:need]).reshape(shape)
+    return Mesh(grid, axes)
+
+
+def make_mesh(shape: Dict[str, int]) -> Mesh:
+    """Arbitrary small mesh for tests, e.g. {'data': 2, 'model': 4}."""
+    need = int(np.prod(list(shape.values())))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(f"need {need} devices, have {len(devices)}")
+    grid = np.asarray(devices[:need]).reshape(tuple(shape.values()))
+    return Mesh(grid, tuple(shape.keys()))

@@ -1,0 +1,183 @@
+"""Step-function factories + sharding trees shared by dryrun/train/serve."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCell
+from ..models.common import abstract_tree, axes_tree
+from ..models.lm import LM
+from ..models.specs import (decode_specs, prefill_batch_specs,
+                            train_batch_specs)
+from ..optim import AdamWConfig, adamw_init, adamw_update
+from ..parallel.axes import ShardingCtx, named_sharding, spec_for
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
+
+
+def shardings_for(axes, shapes, ctx: ShardingCtx):
+    """Pytree of NamedSharding from parallel (axes, ShapeDtypeStruct)."""
+    return jax.tree.map(
+        lambda a, s: NamedSharding(
+            ctx.mesh, spec_for(a, s.shape, ctx.mesh, ctx.rules)),
+        axes, shapes,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (str, type(None))) for e in x))
+
+
+def replicated(ctx: ShardingCtx):
+    return NamedSharding(ctx.mesh, P())
+
+
+def opt_state_axes(param_axes):
+    return {"m": param_axes, "v": param_axes, "step": ()}
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig):
+    ga = model.cfg.grad_accum
+
+    def train_step(params, opt_state, batch):
+        if ga <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                model.loss, has_aux=True)(params, batch)
+        else:
+            # gradient accumulation over microbatches (fp32 accumulators,
+            # sharded like the params)
+            micro = jax.tree.map(
+                lambda x: x.reshape(ga, x.shape[0] // ga, *x.shape[1:]),
+                batch)
+
+            acc_dt = {"float32": jnp.float32,
+                      "bfloat16": jnp.bfloat16}[model.cfg.grad_accum_dtype]
+
+            def body(carry, mb):
+                gsum, lsum, msum = carry
+                (loss, m), g = jax.value_and_grad(
+                    model.loss, has_aux=True)(params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b: a + b.astype(acc_dt), gsum, g)
+                msum = jax.tree.map(lambda a, b: a + b, msum, m)
+                return (gsum, lsum + loss, msum), None
+
+            gsum0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            m0 = {"ce": 0.0, "aux": 0.0, "tokens": 0.0}
+            m0 = jax.tree.map(jnp.float32, m0)
+            (gsum, loss, msum), _ = jax.lax.scan(
+                body, (gsum0, jnp.float32(0.0), m0), micro)
+            grads = jax.tree.map(lambda g: g / ga, gsum)
+            loss = loss / ga
+            metrics = jax.tree.map(lambda x: x / ga, msum)
+        params, opt_state, om = adamw_update(opt_cfg, params, grads,
+                                             opt_state)
+        metrics = {**metrics, **om, "loss": loss}
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(model: LM):
+    def prefill_step(params, batch):
+        return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model: LM):
+    def decode_step(params, cache, tokens, cache_index):
+        return model.decode_step(params, cache, tokens, cache_index)
+    return decode_step
+
+
+def jitted_cell(cfg: ModelConfig, cell: ShapeCell, ctx: ShardingCtx,
+                opt_cfg: Optional[AdamWConfig] = None):
+    """Build (jitted step fn, abstract args) for one (arch x shape) cell
+    under a sharding context.  Used by the dry-run and the launchers."""
+    model = LM(cfg)
+    p_abs = model.abstract_params()
+    p_axes = model.param_axes()
+    p_shard = shardings_for(p_axes, p_abs, ctx)
+
+    if cell.kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        specs, baxes = train_batch_specs(cfg, cell)
+        b_shard = shardings_for(baxes, specs, ctx)
+        if opt_cfg.state_format == "int8":
+            # block-quantized moments: q sharded like the param, the
+            # per-row scale replicated on the last (quantized) dim
+            from ..optim.adamw import _scale_shape
+
+            def q_abs(s):
+                return {"q": jax.ShapeDtypeStruct(s.shape, jnp.int8),
+                        "s": jax.ShapeDtypeStruct(
+                            _scale_shape(s.shape), jnp.float32)}
+
+            m_abs = jax.tree.map(q_abs, p_abs)
+
+            def q_shard(a, s):
+                return {"q": NamedSharding(
+                    ctx.mesh, spec_for(a, s.shape, ctx.mesh, ctx.rules)),
+                    "s": NamedSharding(
+                    ctx.mesh, spec_for(
+                        tuple(a[:-1]) + (None,) if a else (None,),
+                        _scale_shape(s.shape), ctx.mesh, ctx.rules))}
+
+            m_shard = jax.tree.map(
+                q_shard, p_axes, p_abs,
+                is_leaf=lambda x: isinstance(x, tuple) and all(
+                    isinstance(e, (str, type(None))) for e in x))
+        else:
+            # optimizer m/v are fp32 with param shapes
+            m_abs = jax.tree.map(
+                lambda s: jax.ShapeDtypeStruct(s.shape, jnp.float32),
+                p_abs)
+            m_shard = p_shard
+        opt_abs = {"m": m_abs, "v": m_abs,
+                   "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        opt_shard = {"m": m_shard, "v": m_shard, "step": replicated(ctx)}
+        metrics_shard = {k: replicated(ctx) for k in
+                         ("ce", "aux", "tokens", "lr", "grad_norm", "loss")}
+        step = jax.jit(
+            make_train_step(model, opt_cfg),
+            in_shardings=(p_shard, opt_shard, b_shard),
+            out_shardings=(p_shard, opt_shard, metrics_shard),
+            donate_argnums=(0, 1),
+        )
+        return step, (p_abs, opt_abs, specs)
+
+    if cell.kind == "prefill":
+        specs, baxes = prefill_batch_specs(cfg, cell)
+        b_shard = shardings_for(baxes, specs, ctx)
+        cache_defs = model.cache_defs(cell.global_batch, cell.seq_len)
+        c_abs = abstract_tree(cache_defs)
+        c_axes = axes_tree(cache_defs)
+        c_shard = shardings_for(c_axes, c_abs, ctx)
+        logits_shard = named_sharding(
+            ("batch", "act_vocab"),
+            (cell.global_batch, cfg.padded_vocab), ctx)
+        step = jax.jit(
+            make_prefill_step(model),
+            in_shardings=(p_shard, b_shard),
+            out_shardings=(logits_shard, c_shard),
+        )
+        return step, (p_abs, specs)
+
+    if cell.kind == "decode":
+        c_abs, c_axes, tok, tok_axes = decode_specs(cfg, cell)
+        c_shard = shardings_for(c_axes, c_abs, ctx)
+        t_shard = shardings_for(tok_axes, tok, ctx)
+        logits_shard = named_sharding(
+            ("batch", "act_vocab"),
+            (cell.global_batch, cfg.padded_vocab), ctx)
+        idx_abs = jax.ShapeDtypeStruct((), jnp.int32)
+        step = jax.jit(
+            make_decode_step(model),
+            in_shardings=(p_shard, c_shard, t_shard["tokens"],
+                          replicated(ctx)),
+            out_shardings=(logits_shard, c_shard),
+            donate_argnums=(1,),
+        )
+        return step, (p_abs, c_abs, tok["tokens"], idx_abs)
+
+    raise ValueError(cell.kind)

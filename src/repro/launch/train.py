@@ -1,0 +1,176 @@
+"""Training driver: data pipeline -> sharded train loop -> checkpoints.
+
+Production behaviors (all unit-tested):
+  * restart-from-latest-checkpoint (exact data-position resume),
+  * async checkpointing every --ckpt-every steps with retention,
+  * SIGTERM/SIGINT emergency checkpoint (preemption handling),
+  * heartbeat + straggler runtime hooks (single-host here; the monitors
+    are the same objects a multi-host coordinator would drive),
+  * optional int8-compressed cross-pod gradient sync (see
+    repro.parallel.compression; demonstrated in the shard_map DP path).
+
+CPU-scale usage (examples/train_tiny.py wraps this):
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --reduced --steps 100 --batch 8 --seq 128 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import os
+import signal
+import time
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager, load_checkpoint
+from ..checkpoint.store import latest_step
+from ..configs import ARCH_IDS, get_config
+from ..configs.base import ShapeCell
+from ..data import DataConfig, make_train_batches
+from ..models.lm import LM
+from ..models.specs import train_batch_specs
+from ..optim import AdamWConfig, adamw_init
+from ..parallel.axes import sharding_context
+from ..runtime import HeartbeatMonitor, StragglerDetector
+from .mesh import make_mesh
+from .steps import jitted_cell
+
+
+@dataclasses.dataclass
+class TrainLoopConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    log_every: int = 10
+    host: str = "host0"
+
+
+def train_loop(cfg, cell: ShapeCell, loop: TrainLoopConfig,
+               mesh=None, opt_cfg: Optional[AdamWConfig] = None,
+               seed: int = 0) -> Dict[str, float]:
+    """Runs the loop; returns final metrics.  Restartable."""
+    mesh = mesh or make_mesh({"data": 1, "model": 1})
+    opt_cfg = opt_cfg or AdamWConfig(total_steps=loop.steps)
+    model = LM(cfg)
+
+    data_cfg = DataConfig(vocab_size=cfg.vocab_size, seq_len=cell.seq_len,
+                          global_batch=cell.global_batch, seed=seed)
+
+    heart = HeartbeatMonitor([loop.host])
+    straggler = StragglerDetector()
+    manager = (CheckpointManager(loop.ckpt_dir)
+               if loop.ckpt_dir else None)
+
+    with sharding_context(mesh) as ctx:
+        step_fn, _ = jitted_cell(cfg, cell, ctx, opt_cfg=opt_cfg)
+
+        start_step, start_doc = 0, 0
+        params = opt_state = None
+        if loop.ckpt_dir and latest_step(loop.ckpt_dir) is not None:
+            template = {
+                "params": model.abstract_params(),
+                "opt": {"m": model.abstract_params(),
+                        "v": model.abstract_params(),
+                        "step": jax.ShapeDtypeStruct((), jnp.int32)},
+            }
+            template = jax.tree.map(
+                lambda s: np.zeros(s.shape, s.dtype), template)
+            state, meta = load_checkpoint(loop.ckpt_dir, template)
+            params, opt_state = state["params"], state["opt"]
+            opt_state["m"] = jax.tree.map(
+                lambda x: x.astype(jnp.float32), opt_state["m"])
+            opt_state["v"] = jax.tree.map(
+                lambda x: x.astype(jnp.float32), opt_state["v"])
+            start_step = int(meta["step"])
+            start_doc = int(meta.get("next_doc", 0))
+            print(f"[train] restored step {start_step} "
+                  f"(doc {start_doc}) from {loop.ckpt_dir}", flush=True)
+        if params is None:
+            params = model.init_params(jax.random.PRNGKey(seed))
+            opt_state = adamw_init(params, opt_cfg.state_format)
+
+        batches = make_train_batches(data_cfg, start_doc=start_doc)
+
+        interrupted = {"flag": False}
+
+        def on_signal(signum, frame):
+            interrupted["flag"] = True
+
+        old_handlers = {}
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                old_handlers[sig] = signal.signal(sig, on_signal)
+            except ValueError:          # non-main thread (tests)
+                pass
+
+        metrics: Dict[str, float] = {}
+        next_doc = start_doc
+        try:
+            for step in range(start_step, loop.steps):
+                t0 = time.time()
+                batch = next(batches)
+                next_doc = int(batch.pop("next_doc"))
+                params, opt_state, m = step_fn(params, opt_state, batch)
+                m["loss"].block_until_ready()
+                dt = time.time() - t0
+                heart.beat(loop.host)
+                straggler.record(loop.host, dt)
+                metrics = {k: float(v) for k, v in m.items()}
+                metrics["step_time_s"] = dt
+                if (step + 1) % loop.log_every == 0:
+                    print(f"[train] step {step+1} "
+                          f"loss={metrics['loss']:.4f} "
+                          f"lr={metrics['lr']:.2e} {dt*1e3:.0f}ms",
+                          flush=True)
+                if manager and (step + 1) % loop.ckpt_every == 0:
+                    manager.save_async(
+                        step + 1, {"params": params, "opt": opt_state},
+                        {"step": step + 1, "next_doc": next_doc})
+                if interrupted["flag"]:
+                    if manager:
+                        manager.save_emergency(
+                            step + 1, {"params": params, "opt": opt_state},
+                            {"step": step + 1, "next_doc": next_doc})
+                        print(f"[train] emergency checkpoint at "
+                              f"step {step+1}", flush=True)
+                    break
+        finally:
+            if manager:
+                manager.wait()
+            for sig, h in old_handlers.items():
+                signal.signal(sig, h)
+        metrics["final_step"] = float(
+            min(loop.steps, step + 1) if loop.steps else 0)
+        return metrics
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--data", type=int, default=1,
+                    help="data-parallel mesh extent")
+    ap.add_argument("--model", type=int, default=1,
+                    help="model-parallel mesh extent")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    cell = ShapeCell("custom", args.seq, args.batch, "train")
+    mesh = make_mesh({"data": args.data, "model": args.model})
+    loop = TrainLoopConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                           ckpt_every=args.ckpt_every)
+    metrics = train_loop(cfg, cell, loop, mesh=mesh)
+    print(f"[train] done: {metrics}")
+
+
+if __name__ == "__main__":
+    main()

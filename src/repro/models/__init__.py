@@ -1,0 +1,3 @@
+"""Model substrate: composable JAX definitions for all assigned archs."""
+from .lm import LM, build_param_defs  # noqa: F401
+from . import attention, common, moe, specs, ssm  # noqa: F401

@@ -1,0 +1,177 @@
+"""Shared model components: parameter declaration trees, norms, RoPE,
+activations, chunked cross-entropy.
+
+Parameters are declared as :class:`ParamDef` pytrees carrying *logical*
+sharding axes; ``abstract_tree``/``materialize_tree`` turn a declaration
+into ShapeDtypeStructs (dry-run) or initialized arrays (smoke/real runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.axes import constrain
+
+DTYPES = {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+          "float16": jnp.float16, "float8": jnp.float8_e4m3fn}
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | small
+    dtype: str = "bfloat16"
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def tree_map_defs(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_def)
+
+
+def abstract_tree(tree):
+    return tree_map_defs(
+        lambda d: jax.ShapeDtypeStruct(d.shape, DTYPES[d.dtype]), tree)
+
+
+def axes_tree(tree):
+    return tree_map_defs(lambda d: d.axes, tree)
+
+
+def materialize_tree(tree, key: jax.Array):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        dt = DTYPES[d.dtype]
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dt))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dt))
+        elif d.init == "small":
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * d.scale * 0.1).astype(dt))
+        else:
+            out.append((jax.random.normal(k, d.shape, jnp.float32)
+                        * d.scale).astype(dt))
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray,
+            eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * \
+        scale.astype(x.dtype)
+
+
+def layernorm(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return y.astype(x.dtype) * scale.astype(x.dtype) + bias.astype(x.dtype)
+
+
+def activation_fn(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    if name == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(f"unknown activation {name}")
+
+
+def rope(x: jnp.ndarray, positions: jnp.ndarray,
+         theta: float) -> jnp.ndarray:
+    """Rotary embedding, split-halves convention.  x: (B,S,H,D).
+
+    Angles are computed in f32 (position precision), but the rotation
+    itself runs in the model dtype: upcasting x here materializes
+    (B,S,H*D) f32 activations + cotangents — at 72B-train scale that is
+    2 GB per buffer outside the layer loop.
+    """
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (B,S,half)
+    sin = jnp.sin(angles).astype(x.dtype)[:, :, None, :]
+    cos = jnp.cos(angles).astype(x.dtype)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def sinusoidal_positions(length: int, d: int) -> jnp.ndarray:
+    pos = np.arange(length)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10_000.0, 2 * dim / d)
+    table = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(table, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Chunked cross-entropy (never materializes (B, S, V) logits).
+# ---------------------------------------------------------------------------
+
+def chunked_cross_entropy(hidden: jnp.ndarray, lm_head: jnp.ndarray,
+                          targets: jnp.ndarray, loss_mask: jnp.ndarray,
+                          vocab_size: int, chunk: int
+                          ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Mean CE over masked tokens; scans sequence chunks of the LM head
+    matmul so peak logits memory is (B, chunk, V)."""
+    b, s, d = hidden.shape
+    v = lm_head.shape[-1]
+    chunk = min(chunk, s)
+    pad = -s % chunk
+    if pad:
+        hidden = jnp.pad(hidden, ((0, 0), (0, pad), (0, 0)))
+        targets = jnp.pad(targets, ((0, 0), (0, pad)))
+        loss_mask = jnp.pad(loss_mask, ((0, 0), (0, pad)))
+    nc = hidden.shape[1] // chunk
+    hs = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+    ts = targets.reshape(b, nc, chunk).swapaxes(0, 1)
+    ms = loss_mask.reshape(b, nc, chunk).swapaxes(0, 1)
+    vocab_mask = (jnp.arange(v) < vocab_size)
+
+    def body(carry, xs):
+        h, t, m = xs
+        h = constrain(h, "batch", "seq", None)
+        # fp32 MXU accumulation, but round the *saved* logits (and hence
+        # the h/lm_head cotangents) to the model dtype: keeping this
+        # boundary in f32 materializes full-seq f32 dL/dh buffers
+        # (7 x 2 GB on the 72B cell).
+        logits = jnp.einsum("bcd,dv->bcv", h, lm_head)
+        logits = constrain(logits, "batch", None, "act_vocab")
+        logits = jnp.where(vocab_mask, logits.astype(jnp.float32), -1e30)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, t[..., None],
+                                   axis=-1).squeeze(-1)
+        ce = (lse - gold) * m
+        loss_sum, count = carry
+        return (loss_sum + ce.sum(), count + m.sum()), None
+
+    # checkpoint: the backward recomputes each chunk's logits instead of
+    # saving (B, chunk, V) fp32 blocks across all chunks.
+    body = jax.checkpoint(body)
+    (loss_sum, count), _ = jax.lax.scan(
+        body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+        (hs, ts, ms.astype(jnp.float32)))
+    return loss_sum / jnp.maximum(count, 1.0), count

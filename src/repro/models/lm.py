@@ -1,0 +1,671 @@
+"""Model assembly for every assigned architecture family.
+
+One :class:`LM` object per config exposes:
+
+  * ``abstract_params()`` / ``init_params(key)``  (+ logical sharding axes)
+  * ``loss(params, batch)``                — training objective
+  * ``prefill(params, batch)``             — returns (last-token logits, cache)
+  * ``decode_step(params, cache, tokens, cache_index)``
+
+Families: dense (GQA), moe (GShard EP), ssm (Mamba2/SSD), hybrid (zamba2
+shared blocks), vlm (interleaved cross-attention), encdec (whisper).
+Layers are stacked and scanned (small HLO, checkpointed per layer).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeCell
+from ..parallel.axes import constrain
+from .attention import chunked_attention, decode_attention, update_cache
+from .common import (ParamDef, abstract_tree, activation_fn, axes_tree,
+                     chunked_cross_entropy, materialize_tree, rmsnorm, rope,
+                     sinusoidal_positions)
+from .moe import moe_ffn
+from .ssm import mamba_block
+
+
+def _tree_index(tree, i):
+    return jax.tree.map(
+        lambda a: jax.lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+        tree)
+
+
+def _is_axes_leaf(x):
+    return isinstance(x, tuple) and all(
+        isinstance(e, (str, type(None))) for e in x)
+
+
+def constrain_like(params, axes, skip_leading: int = 1):
+    """Re-assert sharding of per-layer parameter slices *inside* a scan
+    body.  Without this, XLA hoists the FSDP all-gather of the stacked
+    weights out of the layer loop and materializes the full unsharded
+    parameter stack (observed: 72B train peak 37 GB/device -> ~10 GB with
+    the constraint).  ``skip_leading`` drops the scanned 'layers' axis."""
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_a = jax.tree.flatten(axes, is_leaf=_is_axes_leaf)[0]
+    out = [constrain(x, *a[skip_leading:])
+           for x, a in zip(flat_p, flat_a)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Parameter declarations
+# ---------------------------------------------------------------------------
+
+def _attn_defs(cfg: ModelConfig, L: int, gated: bool = False,
+               kv_in: Optional[int] = None) -> Dict:
+    d = cfg.d_model
+    hd = cfg.resolved_head_dim
+    nq = cfg.num_heads * hd
+    nkv = cfg.num_kv_heads * hd
+    kv_in = kv_in or d
+    p = {
+        "norm": ParamDef((L, d), ("layers", None), init="ones"),
+        "wq": ParamDef((L, d, nq), ("layers", "embed", "heads")),
+        "wk": ParamDef((L, kv_in, nkv), ("layers", "embed", "kv")),
+        "wv": ParamDef((L, kv_in, nkv), ("layers", "embed", "kv")),
+        "wo": ParamDef((L, nq, d), ("layers", "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = ParamDef((L, nq), ("layers", "heads"), init="zeros")
+        p["bk"] = ParamDef((L, nkv), ("layers", "kv"), init="zeros")
+        p["bv"] = ParamDef((L, nkv), ("layers", "kv"), init="zeros")
+    if gated:
+        p["gate"] = ParamDef((L,), ("layers",), init="zeros")
+    return p
+
+
+def _mlp_defs(cfg: ModelConfig, L: int) -> Dict:
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {
+        "norm": ParamDef((L, d), ("layers", None), init="ones"),
+        "wi": ParamDef((L, d, ff), ("layers", "embed", "mlp")),
+        "wo": ParamDef((L, ff, d), ("layers", "mlp", "embed")),
+    }
+    if cfg.activation != "squared_relu":
+        p["wg"] = ParamDef((L, d, ff), ("layers", "embed", "mlp"))
+    return p
+
+
+def _dense_mlp_defs(cfg: ModelConfig, L: int) -> Dict:
+    """Un-stacked-expert dense MLP used as shared expert / dense residual."""
+    d, ff = cfg.d_model, cfg.d_ff
+    return {
+        "wi": ParamDef((L, d, ff), ("layers", "embed", "mlp")),
+        "wg": ParamDef((L, d, ff), ("layers", "embed", "mlp")),
+        "wo": ParamDef((L, ff, d), ("layers", "mlp", "embed")),
+    }
+
+
+def _moe_defs(cfg: ModelConfig, L: int) -> Dict:
+    d, ff, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    p = {
+        "norm": ParamDef((L, d), ("layers", None), init="ones"),
+        "router": ParamDef((L, d, e), ("layers", "embed", None)),
+        "wi": ParamDef((L, e, d, ff), ("layers", "expert", "embed", None)),
+        "wg": ParamDef((L, e, d, ff), ("layers", "expert", "embed", None)),
+        "wo": ParamDef((L, e, ff, d), ("layers", "expert", None, "embed")),
+    }
+    if cfg.moe_shared_expert:
+        p["shared"] = _dense_mlp_defs(cfg, L)
+    if cfg.moe_dense_residual:
+        p["dense"] = _dense_mlp_defs(cfg, L)
+    return p
+
+
+def _ssm_defs(cfg: ModelConfig, L: int) -> Dict:
+    d = cfg.d_model
+    din = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    h = cfg.ssm_heads
+    return {
+        "in_norm": ParamDef((L, d), ("layers", None), init="ones"),
+        "w_zx": ParamDef((L, d, 2 * din), ("layers", "embed", "ssm_inner")),
+        "w_bc": ParamDef((L, d, 2 * gn), ("layers", "embed", None)),
+        "w_dt": ParamDef((L, d, h), ("layers", "embed", None)),
+        "dt_bias": ParamDef((L, h), ("layers", None), init="zeros"),
+        "conv_w": ParamDef((L, cfg.ssm_conv, cfg.conv_dim),
+                           ("layers", None, "conv_dim")),
+        "conv_b": ParamDef((L, cfg.conv_dim), ("layers", "conv_dim"),
+                           init="zeros"),
+        "a_log": ParamDef((L, h), ("layers", None), init="ones"),
+        "d_skip": ParamDef((L, h), ("layers", None), init="ones"),
+        "gate_norm": ParamDef((L, din), ("layers", "ssm_inner"),
+                              init="ones"),
+        "w_out": ParamDef((L, din, d), ("layers", "ssm_inner", "embed")),
+    }
+
+
+def build_param_defs(cfg: ModelConfig) -> Dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    L = cfg.num_layers
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((v, d), ("vocab", "embed")),
+        "final_norm": ParamDef((d,), (None,), init="ones"),
+        "lm_head": ParamDef((d, v), ("embed", "vocab")),
+    }
+    fam = cfg.family
+    if fam in ("dense", "vlm"):
+        defs["blocks"] = {"attn": _attn_defs(cfg, L),
+                          "mlp": _mlp_defs(cfg, L)}
+        if fam == "vlm":
+            lc = L // cfg.cross_attn_every
+            defs["cross"] = _attn_defs(cfg, lc, gated=True)
+    elif fam == "moe":
+        defs["blocks"] = {"attn": _attn_defs(cfg, L),
+                          "moe": _moe_defs(cfg, L)}
+    elif fam == "ssm":
+        defs["blocks"] = _ssm_defs(cfg, L)
+    elif fam == "hybrid":
+        defs["blocks"] = _ssm_defs(cfg, L)
+        nb = cfg.num_shared_blocks
+        defs["shared"] = {"attn": _attn_defs(cfg, nb),
+                          "mlp": _mlp_defs(cfg, nb)}
+    elif fam == "encdec":
+        le = cfg.encoder_layers
+        defs["enc_blocks"] = {"attn": _attn_defs(cfg, le),
+                              "mlp": _mlp_defs(cfg, le)}
+        defs["enc_norm"] = ParamDef((d,), (None,), init="ones")
+        defs["blocks"] = {"attn": _attn_defs(cfg, L),
+                          "cross": _attn_defs(cfg, L),
+                          "mlp": _mlp_defs(cfg, L)}
+    else:
+        raise ValueError(f"unknown family {fam}")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# Layer applications
+# ---------------------------------------------------------------------------
+
+def _proj_qkv(cfg: ModelConfig, p: Dict, x: jnp.ndarray,
+              kv_input: Optional[jnp.ndarray] = None):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    kv_src = x if kv_input is None else kv_input
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+    k = jnp.einsum("bsd,dh->bsh", kv_src, p["wk"])
+    v = jnp.einsum("bsd,dh->bsh", kv_src, p["wv"])
+    if "bq" in p:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = q.reshape(b, s, cfg.num_heads, hd)
+    k = k.reshape(b, kv_src.shape[1], cfg.num_kv_heads, hd)
+    v = v.reshape(b, kv_src.shape[1], cfg.num_kv_heads, hd)
+    q = constrain(q, "batch", None, "act_heads", None)
+    k = constrain(k, "batch", None, None, None)
+    return q, k, v
+
+
+def _self_attention(cfg: ModelConfig, p: Dict, h: jnp.ndarray,
+                    positions, segment_ids, mode: str,
+                    cache_kv=None, cache_index=None, causal: bool = True):
+    """Returns (h_out, (k_cache,v_cache)|kv-to-collect|None)."""
+    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+    q, k, v = _proj_qkv(cfg, p, x)
+    if cfg.family != "encdec" and positions is not None:
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    side = None
+    if mode == "decode":
+        ck, cv = cache_kv
+        ck, cv = update_cache(ck, cv, k, v, cache_index)
+        ck = constrain(ck, "batch", "kv_seq", None, None)
+        cv = constrain(cv, "batch", "kv_seq", None, None)
+        out = decode_attention(q, ck, cv, cache_index)
+        side = (ck, cv)
+    else:
+        out = chunked_attention(q, k, v, causal=causal,
+                                segment_ids=segment_ids,
+                                chunk=cfg.attn_chunk,
+                                use_pallas=cfg.use_pallas)
+        if mode == "prefill":
+            side = (k, v)
+    b, s = h.shape[:2]
+    out = out.reshape(b, s, -1)
+    h = h + jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    h = constrain(h, "batch", "seq", None)
+    return h, side
+
+
+def _cross_attention(cfg: ModelConfig, p: Dict, h: jnp.ndarray,
+                     kv_input=None, cached_kv=None, gated: bool = False):
+    """Cross-attn against encoder output / image embeds (non-causal)."""
+    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    if cached_kv is None:
+        q, k, v = _proj_qkv(cfg, p, x, kv_input=kv_input)
+    else:
+        q = jnp.einsum("bsd,dh->bsh", x, p["wq"])
+        if "bq" in p:
+            q = q + p["bq"]
+        q = q.reshape(b, s, cfg.num_heads, hd)
+        k, v = cached_kv
+    out = chunked_attention(q, k, v, causal=False, chunk=cfg.attn_chunk,
+                            use_pallas=cfg.use_pallas)
+    out = out.reshape(b, s, -1)
+    delta = jnp.einsum("bsh,hd->bsd", out, p["wo"])
+    if gated:
+        delta = delta * jnp.tanh(p["gate"]).astype(delta.dtype)
+    return h + delta
+
+
+def _mlp(cfg: ModelConfig, p: Dict, h: jnp.ndarray) -> jnp.ndarray:
+    x = rmsnorm(h, p["norm"], cfg.norm_eps)
+    act = activation_fn(cfg.activation)
+    u = act(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+    if "wg" in p:
+        u = u * jnp.einsum("bsd,df->bsf", x, p["wg"])
+    u = constrain(u, "batch", None, "mlp")
+    h = h + jnp.einsum("bsf,fd->bsd", u, p["wo"])
+    return constrain(h, "batch", "seq", None)
+
+
+def _cross_kv_from(cfg: ModelConfig, p_stack: Dict, src: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Precompute stacked cross K/V caches: (L?, B, T, K, hd)."""
+    hd = cfg.resolved_head_dim
+    k = jnp.einsum("btd,ldh->lbth", src, p_stack["wk"])
+    v = jnp.einsum("btd,ldh->lbth", src, p_stack["wv"])
+    if "bk" in p_stack:
+        k = k + p_stack["bk"][:, None, None, :]
+        v = v + p_stack["bv"][:, None, None, :]
+    lc, b, t, _ = k.shape
+    k = k.reshape(lc, b, t, cfg.num_kv_heads, hd)
+    v = v.reshape(lc, b, t, cfg.num_kv_heads, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# The model object
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class LM:
+    cfg: ModelConfig
+
+    def __post_init__(self):
+        self.defs = build_param_defs(self.cfg)
+        self._axes = axes_tree(self.defs)
+
+    def _unroll(self):
+        return True if self.cfg.scan_unroll else 1
+
+    # ---- parameters ----
+    def abstract_params(self):
+        return abstract_tree(self.defs)
+
+    def param_axes(self):
+        return axes_tree(self.defs)
+
+    def init_params(self, key: jax.Array):
+        return materialize_tree(self.defs, key)
+
+    # ---- embedding ----
+    def _embed(self, params, tokens, positions=None):
+        h = jnp.take(params["embed"], tokens, axis=0)
+        if self.cfg.family == "encdec" and positions is not None:
+            table = sinusoidal_positions(8192, self.cfg.d_model)
+            h = h + jnp.take(table, jnp.clip(positions, 0, 8191),
+                             axis=0).astype(h.dtype)
+        return constrain(h, "batch", "seq", None)
+
+    # ---- backbones ----
+    def _transformer_stack(self, params, h, positions, segment_ids, mode,
+                           cache=None, cache_index=None, image_embeds=None):
+        cfg = self.cfg
+        L = cfg.num_layers
+        blocks = params["blocks"]
+        cross = params.get("cross")
+        remat = (cfg.remat != "none") and mode == "train"
+
+        def body(carry, xs):
+            h, aux = carry
+            if mode == "decode":
+                p, idx, ck, cv = xs
+            else:
+                p, idx = xs
+                ck = cv = None
+            p = constrain_like(p, self._axes["blocks"])
+            if cfg.cross_attn_every:
+                every = cfg.cross_attn_every
+
+                def do_cross(hh):
+                    ci = idx // every
+                    cp = _tree_index(cross, ci)
+                    cp = constrain_like(cp, self._axes["cross"])
+                    if mode == "decode":
+                        ckv = (_tree_index(cache["cross_k"], ci),
+                               _tree_index(cache["cross_v"], ci))
+                        return _cross_attention(cfg, cp, hh,
+                                                cached_kv=ckv, gated=True)
+                    return _cross_attention(cfg, cp, hh,
+                                            kv_input=image_embeds,
+                                            gated=True)
+
+                h = jax.lax.cond(idx % every == 0, do_cross,
+                                 lambda hh: hh, h)
+            h, side = _self_attention(
+                cfg, p["attn"], h, positions, segment_ids, mode,
+                cache_kv=(ck, cv) if mode == "decode" else None,
+                cache_index=cache_index)
+            if "moe" in p:
+                x = rmsnorm(h, p["moe"]["norm"], cfg.norm_eps)
+                out, a = moe_ffn(p["moe"], x, cfg)
+                h = constrain(h + out, "batch", "seq", None)
+                aux = aux + a
+            else:
+                h = _mlp(cfg, p["mlp"], h)
+            ys = side if mode in ("decode", "prefill") else 0
+            return (h, aux), ys
+
+        if remat:
+            body = jax.checkpoint(body)
+        idxs = jnp.arange(L)
+        if mode == "decode":
+            xs = (blocks, idxs, cache["k"], cache["v"])
+        else:
+            xs = (blocks, idxs)
+        (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                    xs, unroll=self._unroll())
+        new_cache = None
+        if mode == "decode":
+            new_cache = dict(cache)
+            new_cache["k"], new_cache["v"] = ys
+        elif mode == "prefill":
+            new_cache = {"k": ys[0], "v": ys[1]}
+        return h, aux, new_cache
+
+    def _ssm_stack(self, params, h, mode, cache=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            h = carry
+            if mode == "decode":
+                p, sst, cst = xs
+                p = constrain_like(p, self._axes["blocks"])
+                h, ns = mamba_block(p, h, cfg,
+                                    state={"ssm": sst, "conv": cst})
+            else:
+                p = constrain_like(xs, self._axes["blocks"])
+                h, ns = mamba_block(p, h, cfg)
+            h = constrain(h, "batch", "seq", None)
+            ys = ((ns["ssm"], ns["conv"])
+                  if mode in ("decode", "prefill") else 0)
+            return h, ys
+
+        if cfg.remat != "none" and mode == "train":
+            body = jax.checkpoint(body)
+        xs = ((params["blocks"], cache["ssm"], cache["conv"])
+              if mode == "decode" else params["blocks"])
+        h, ys = jax.lax.scan(body, h, xs, unroll=self._unroll())
+        new_cache = None
+        if mode in ("decode", "prefill"):
+            new_cache = {"ssm": ys[0], "conv": ys[1]}
+        return h, jnp.zeros((), jnp.float32), new_cache
+
+    def _hybrid_stack(self, params, h, positions, segment_ids, mode,
+                      cache=None, cache_index=None):
+        cfg = self.cfg
+        every = cfg.attn_every
+        groups = cfg.num_layers // every
+        remat = cfg.remat != "none" and mode == "train"
+
+        def mamba_body(carry, xs):
+            hh = carry
+            if mode == "decode":
+                p, sst, cst = xs
+                p = constrain_like(p, self._axes["blocks"])
+                hh, ns = mamba_block(p, hh, cfg,
+                                     state={"ssm": sst, "conv": cst})
+            else:
+                p = constrain_like(xs, self._axes["blocks"])
+                hh, ns = mamba_block(p, hh, cfg)
+            hh = constrain(hh, "batch", "seq", None)
+            ys = ((ns["ssm"], ns["conv"])
+                  if mode in ("decode", "prefill") else 0)
+            return hh, ys
+
+        if remat:
+            mamba_body = jax.checkpoint(mamba_body)
+
+        ssm_caches, conv_caches = [], []
+        shared_k, shared_v = [], []
+        new_cache = dict(cache) if cache is not None else None
+        for gi in range(groups):
+            sp = jax.tree.map(lambda a: a[gi % cfg.num_shared_blocks],
+                              params["shared"])
+            sp = constrain_like(sp, self._axes["shared"])
+            if mode == "decode":
+                ckv = (cache["shared_k"][gi], cache["shared_v"][gi])
+            else:
+                ckv = None
+            h, side = _self_attention(
+                cfg, sp["attn"], h, positions, segment_ids, mode,
+                cache_kv=ckv, cache_index=cache_index)
+            h = _mlp(cfg, sp["mlp"], h)
+            if side is not None:
+                shared_k.append(side[0])
+                shared_v.append(side[1])
+            sl = slice(gi * every, (gi + 1) * every)
+            p_grp = jax.tree.map(lambda a: a[sl], params["blocks"])
+            if mode == "decode":
+                xs = (p_grp, cache["ssm"][sl], cache["conv"][sl])
+            else:
+                xs = p_grp
+            h, ys = jax.lax.scan(mamba_body, h, xs,
+                                 unroll=self._unroll())
+            if mode in ("decode", "prefill"):
+                ssm_caches.append(ys[0])
+                conv_caches.append(ys[1])
+        if mode in ("decode", "prefill"):
+            new_cache = {
+                "ssm": jnp.concatenate(ssm_caches, axis=0),
+                "conv": jnp.concatenate(conv_caches, axis=0),
+                "shared_k": jnp.stack(shared_k),
+                "shared_v": jnp.stack(shared_v),
+            }
+        return h, jnp.zeros((), jnp.float32), new_cache
+
+    def _encode(self, params, frames):
+        cfg = self.cfg
+        table = sinusoidal_positions(cfg.num_frames, cfg.d_model)
+        h = frames + table[None, :frames.shape[1]].astype(frames.dtype)
+        h = constrain(h, "batch", "seq", None)
+
+        def body(carry, p):
+            hh, _ = carry
+            p = constrain_like(p, self._axes["enc_blocks"])
+            hh, _side = _self_attention(cfg, p["attn"], hh, None, None,
+                                        "train", causal=False)
+            hh = _mlp(cfg, p["mlp"], hh)
+            return (hh, 0.0), 0
+
+        (h, _), _ = jax.lax.scan(body, (h, 0.0), params["enc_blocks"],
+                                 unroll=self._unroll())
+        return rmsnorm(h, params["enc_norm"], cfg.norm_eps)
+
+    def _encdec_stack(self, params, h, positions, mode, enc_out=None,
+                      cache=None, cache_index=None):
+        cfg = self.cfg
+
+        def body(carry, xs):
+            hh, aux = carry
+            if mode == "decode":
+                p, ck, cv, xk, xv = xs
+            else:
+                p = xs
+                ck = cv = xk = xv = None
+            p = constrain_like(p, self._axes["blocks"])
+            hh, side = _self_attention(
+                cfg, p["attn"], hh, positions, None, mode,
+                cache_kv=(ck, cv) if mode == "decode" else None,
+                cache_index=cache_index)
+            if mode == "decode":
+                hh = _cross_attention(cfg, p["cross"], hh,
+                                      cached_kv=(xk, xv))
+            else:
+                hh = _cross_attention(cfg, p["cross"], hh,
+                                      kv_input=enc_out)
+            hh = _mlp(cfg, p["mlp"], hh)
+            ys = side if mode in ("decode", "prefill") else 0
+            return (hh, aux), ys
+
+        if cfg.remat != "none" and mode == "train":
+            body = jax.checkpoint(body)
+        if mode == "decode":
+            xs = (params["blocks"], cache["k"], cache["v"],
+                  cache["cross_k"], cache["cross_v"])
+        else:
+            xs = params["blocks"]
+        (h, aux), ys = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)),
+                                    xs, unroll=self._unroll())
+        new_cache = None
+        if mode == "decode":
+            new_cache = dict(cache)
+            new_cache["k"], new_cache["v"] = ys[0], ys[1]
+        elif mode == "prefill":
+            new_cache = {"k": ys[0], "v": ys[1]}
+        return h, aux, new_cache
+
+    # ---- top-level passes ----
+    def _backbone(self, params, tokens, positions, segment_ids, mode,
+                  cache=None, cache_index=None, image_embeds=None,
+                  frames=None):
+        cfg = self.cfg
+        h = self._embed(params, tokens, positions)
+        fam = cfg.family
+        if fam in ("dense", "moe", "vlm"):
+            h, aux, new_cache = self._transformer_stack(
+                params, h, positions, segment_ids, mode, cache=cache,
+                cache_index=cache_index, image_embeds=image_embeds)
+            if fam == "vlm" and mode == "prefill":
+                ck, cv = _cross_kv_from(cfg, params["cross"], image_embeds)
+                new_cache["cross_k"] = ck
+                new_cache["cross_v"] = cv
+        elif fam == "ssm":
+            h, aux, new_cache = self._ssm_stack(params, h, mode, cache)
+        elif fam == "hybrid":
+            h, aux, new_cache = self._hybrid_stack(
+                params, h, positions, segment_ids, mode, cache,
+                cache_index)
+        elif fam == "encdec":
+            if mode == "decode":
+                h, aux, new_cache = self._encdec_stack(
+                    params, h, positions, mode, cache=cache,
+                    cache_index=cache_index)
+            else:
+                enc_out = self._encode(params, frames)
+                h, aux, new_cache = self._encdec_stack(
+                    params, h, positions, mode, enc_out=enc_out)
+                if mode == "prefill":
+                    xk, xv = _cross_kv_from(cfg, params["blocks"]["cross"],
+                                            enc_out)
+                    new_cache["cross_k"] = xk
+                    new_cache["cross_v"] = xv
+        else:
+            raise ValueError(fam)
+        h = rmsnorm(h, params["final_norm"], cfg.norm_eps)
+        h = constrain(h, "batch", "seq", None)
+        return h, aux, new_cache
+
+    def loss(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        cfg = self.cfg
+        h, aux, _ = self._backbone(
+            params, batch["tokens"], batch["positions"],
+            batch.get("segment_ids"), "train",
+            image_embeds=batch.get("image_embeds"),
+            frames=batch.get("frames"))
+        ce, count = chunked_cross_entropy(
+            h, params["lm_head"], batch["targets"], batch["loss_mask"],
+            cfg.vocab_size, cfg.ce_chunk)
+        loss = ce + 0.01 * aux
+        return loss, {"ce": ce, "aux": aux, "tokens": count}
+
+    def prefill(self, params, batch) -> Tuple[jnp.ndarray, Dict]:
+        h, _aux, cache = self._backbone(
+            params, batch["tokens"], batch["positions"],
+            batch.get("segment_ids"), "prefill",
+            image_embeds=batch.get("image_embeds"),
+            frames=batch.get("frames"))
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"])
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens, cache_index
+                    ) -> Tuple[jnp.ndarray, Dict]:
+        """``cache_index``: scalar, or (B,) for continuous batching where
+        every request slot sits at its own sequence position."""
+        b = tokens.shape[0]
+        ci = jnp.asarray(cache_index)
+        positions = jnp.broadcast_to(
+            ci.reshape(-1, 1) if ci.ndim else ci, (b, 1)
+        ).astype(jnp.int32)
+        h, _aux, new_cache = self._backbone(
+            params, tokens, positions, None, "decode",
+            cache=cache, cache_index=cache_index)
+        logits = jnp.einsum("bd,dv->bv", h[:, -1], params["lm_head"])
+        logits = constrain(logits, "batch", "act_vocab")
+        return logits, new_cache
+
+    # ---- cache declaration (for dry-run input specs) ----
+    def cache_defs(self, batch: int, seq: int) -> Dict:
+        cfg = self.cfg
+        hd = cfg.resolved_head_dim if cfg.num_heads else 0
+        L = cfg.num_layers
+        kvh = cfg.num_kv_heads
+
+        def kv(n_layers, t):
+            return {
+                "k": ParamDef((n_layers, batch, t, kvh, hd),
+                              ("layers", "batch", "kv_seq", None, None),
+                              dtype=cfg.kv_cache_dtype),
+                "v": ParamDef((n_layers, batch, t, kvh, hd),
+                              ("layers", "batch", "kv_seq", None, None),
+                              dtype=cfg.kv_cache_dtype),
+            }
+
+        def ssm_states(n_layers):
+            return {
+                "ssm": ParamDef(
+                    (n_layers, batch, cfg.ssm_ngroups,
+                     cfg.ssm_heads // cfg.ssm_ngroups,
+                     cfg.ssm_headdim, cfg.ssm_state),
+                    ("layers", "batch", None, "act_heads", None, None),
+                    dtype="float32"),
+                "conv": ParamDef(
+                    (n_layers, batch, cfg.ssm_conv - 1, cfg.conv_dim),
+                    ("layers", "batch", None, "conv_dim")),
+            }
+
+        fam = cfg.family
+        if fam in ("dense", "moe"):
+            return kv(L, seq)
+        if fam == "vlm":
+            c = kv(L, seq)
+            lc = L // cfg.cross_attn_every
+            cross = kv(lc, cfg.num_image_tokens)
+            c["cross_k"], c["cross_v"] = cross["k"], cross["v"]
+            return c
+        if fam == "ssm":
+            return ssm_states(L)
+        if fam == "hybrid":
+            c = ssm_states(L)
+            groups = L // cfg.attn_every
+            shared = kv(groups, seq)
+            c["shared_k"], c["shared_v"] = shared["k"], shared["v"]
+            return c
+        if fam == "encdec":
+            c = kv(L, seq)
+            cross = kv(L, cfg.num_frames)
+            c["cross_k"], c["cross_v"] = cross["k"], cross["v"]
+            return c
+        raise ValueError(fam)

@@ -1,0 +1,95 @@
+"""Mixture-of-Experts block: GShard-style grouped top-k dispatch with
+capacity, expert-parallel over the 'model' mesh axis.
+
+Tokens are split into groups of ``cfg.moe_group_size``; per group a
+(g, E, c) dispatch/combine pair routes tokens to experts via einsum so the
+expert matmuls stay dense and MXU-shaped.  Expert weights carry the
+'expert' logical axis -> 'model' mesh axis (EP); XLA inserts the
+all-to-all-equivalent collectives from the sharding constraints.
+
+Supports: top-1 (llama4-scout) and top-2 (arctic), a llama4-style shared
+expert, an arctic-style parallel dense residual, and a load-balance aux
+loss (Switch/GShard form).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..parallel.axes import constrain
+from .common import activation_fn
+
+
+def moe_ffn(params: Dict, x: jnp.ndarray, cfg
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D) -> (out (B,S,D), aux_loss scalar)."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    k = cfg.experts_per_token
+    act = activation_fn(cfg.activation)
+    t = b * s
+    g = min(cfg.moe_group_size, t)
+    pad = -t % g
+    xt = x.reshape(t, d)
+    if pad:
+        xt = jnp.pad(xt, ((0, pad), (0, 0)))
+    ng = xt.shape[0] // g
+    xg = xt.reshape(ng, g, d)
+    xg = constrain(xg, "batch", None, None)
+
+    logits = jnp.einsum("Ggd,de->Gge", xg, params["router"]
+                        ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G,g,E)
+
+    capacity = int(np.ceil(k * g / e * cfg.capacity_factor))
+    capacity = max(capacity, 4)
+
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # (G,g,k)
+    # renormalize the k gates (standard for top-2 routing)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    counts = jnp.zeros((ng, e), jnp.int32)
+    dispatch = jnp.zeros((ng, g, e, capacity), xg.dtype)
+    combine = jnp.zeros((ng, g, e, capacity), jnp.float32)
+    for j in range(k):
+        mask_j = jax.nn.one_hot(gate_idx[..., j], e,
+                                dtype=jnp.int32)            # (G,g,E)
+        pos_j = counts[:, None, :] + jnp.cumsum(mask_j, axis=1) - mask_j
+        keep = (pos_j < capacity) & (mask_j > 0)
+        counts = counts + mask_j.sum(axis=1)
+        oh = jax.nn.one_hot(jnp.where(keep, pos_j, capacity),
+                            capacity, dtype=xg.dtype)       # (G,g,E,c)
+        oh = oh * keep[..., None].astype(xg.dtype)
+        dispatch = dispatch + oh
+        combine = combine + oh.astype(jnp.float32) * \
+            gate_vals[..., j, None, None] * mask_j[..., None]
+
+    # aux load-balance loss: E * sum_e mean(frac_tokens_e) * mean(prob_e)
+    frac = jnp.mean(
+        jax.nn.one_hot(gate_idx[..., 0], e, dtype=jnp.float32),
+        axis=(0, 1))
+    mean_prob = jnp.mean(probs, axis=(0, 1))
+    aux = e * jnp.sum(frac * mean_prob)
+
+    xd = jnp.einsum("GgEc,Ggd->GEcd", dispatch, xg)
+    xd = constrain(xd, None, "act_expert", None, None)
+    wi, wg, wo = params["wi"], params["wg"], params["wo"]
+    h = act(jnp.einsum("GEcd,Edf->GEcf", xd, wi))
+    h = h * jnp.einsum("GEcd,Edf->GEcf", xd, wg)
+    y = jnp.einsum("GEcf,Efd->GEcd", h, wo)
+    y = constrain(y, None, "act_expert", None, None)
+    out = jnp.einsum("GgEc,GEcd->Ggd", combine.astype(y.dtype), y)
+
+    out = out.reshape(-1, d)[:t].reshape(b, s, d)
+
+    if cfg.moe_shared_expert or cfg.moe_dense_residual:
+        key = "shared" if cfg.moe_shared_expert else "dense"
+        p = params[key]
+        hh = act(jnp.einsum("bsd,df->bsf", x, p["wi"]))
+        hh = hh * jnp.einsum("bsd,df->bsf", x, p["wg"])
+        out = out + jnp.einsum("bsf,fd->bsd", hh, p["wo"])
+    return out, aux

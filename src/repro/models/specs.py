@@ -1,0 +1,84 @@
+"""input_specs(): ShapeDtypeStruct stand-ins + logical axes for every
+(architecture x shape-cell), used by the dry-run and by jit shardings.
+
+No device allocation happens here — the same pattern shannon/kernels uses.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, ShapeCell
+from .common import ParamDef, abstract_tree, axes_tree
+from .lm import LM
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(cfg: ModelConfig, cell: ShapeCell
+                      ) -> Tuple[Dict, Dict]:
+    """(ShapeDtypeStructs, logical axes) for one training batch."""
+    b, s = cell.global_batch, cell.seq_len
+    specs = {
+        "tokens": _sds((b, s), jnp.int32),
+        "targets": _sds((b, s), jnp.int32),
+        "loss_mask": _sds((b, s), jnp.float32),
+        "positions": _sds((b, s), jnp.int32),
+        "segment_ids": _sds((b, s), jnp.int32),
+    }
+    axes = {k: ("batch", None) for k in specs}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+        axes["image_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((b, cfg.num_frames, cfg.d_model),
+                               jnp.bfloat16)
+        axes["frames"] = ("batch", None, None)
+    return specs, axes
+
+
+def prefill_batch_specs(cfg: ModelConfig, cell: ShapeCell
+                        ) -> Tuple[Dict, Dict]:
+    b, s = cell.global_batch, cell.seq_len
+    specs = {
+        "tokens": _sds((b, s), jnp.int32),
+        "positions": _sds((b, s), jnp.int32),
+    }
+    axes = {k: ("batch", None) for k in specs}
+    if cfg.family == "vlm":
+        specs["image_embeds"] = _sds((b, cfg.num_image_tokens, cfg.d_model),
+                                     jnp.bfloat16)
+        axes["image_embeds"] = ("batch", None, None)
+    if cfg.family == "encdec":
+        specs["frames"] = _sds((b, cfg.num_frames, cfg.d_model),
+                               jnp.bfloat16)
+        axes["frames"] = ("batch", None, None)
+    return specs, axes
+
+
+def decode_specs(cfg: ModelConfig, cell: ShapeCell
+                 ) -> Tuple[Dict, Dict, Dict, Dict]:
+    """Returns (cache specs, cache axes, token specs, token axes)."""
+    model = LM(cfg)
+    cache_defs = model.cache_defs(cell.global_batch, cell.seq_len)
+    cache_specs = abstract_tree(cache_defs)
+    cache_axes = axes_tree(cache_defs)
+    tok = {"tokens": _sds((cell.global_batch, 1), jnp.int32)}
+    tok_axes = {"tokens": ("batch", None)}
+    return cache_specs, cache_axes, tok, tok_axes
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell):
+    """Unified entry: dict describing everything the step function takes."""
+    if cell.kind == "train":
+        return train_batch_specs(cfg, cell)
+    if cell.kind == "prefill":
+        return prefill_batch_specs(cfg, cell)
+    if cell.kind == "decode":
+        return decode_specs(cfg, cell)
+    raise ValueError(cell.kind)

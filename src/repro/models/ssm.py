@@ -1,0 +1,221 @@
+"""Mamba2 / SSD (state-space duality) sequence mixing.
+
+Chunked training algorithm per arXiv:2405.21060 (minimal-SSD form): the
+sequence is split into chunks; intra-chunk terms use the quadratic
+"attention-like" dual with a decay matrix, inter-chunk terms pass a
+(heads, headdim, state) recurrence through a `lax.scan`.  Decode is the
+O(1)-per-token linear recurrence — this is why the `long_500k` cell is
+runnable for the SSM/hybrid architectures only.
+
+Oracle for tests: :func:`ssd_naive` (step-by-step recurrence).
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import rmsnorm
+
+
+def _segsum(x: jnp.ndarray) -> jnp.ndarray:
+    """(..., L) -> (..., L, L); [i, j] = sum_{k=j+1..i} x_k, -inf for i<j."""
+    cs = x.shape[-1]
+    xc = jnp.cumsum(x, axis=-1)
+    diff = xc[..., :, None] - xc[..., None, :]
+    mask = jnp.tril(jnp.ones((cs, cs), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                b: jnp.ndarray, c: jnp.ndarray, chunk: int,
+                initial_state: Optional[jnp.ndarray] = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B,S,H,P); dt: (B,S,H); a_log: (H,); b/c: (B,S,G,N).
+
+    Returns (y (B,S,H,P), final_state (B,G,H/G,P,N)).
+    """
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    pad = -s % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+
+    a = -jnp.exp(a_log.astype(jnp.float32))                 # (H,)
+    dtf = dt.astype(jnp.float32)
+    da = (dtf * a).reshape(bsz, nc, chunk, g, hg)           # log decay
+    xdt = (x * dt[..., None]).reshape(bsz, nc, chunk, g, hg, p)
+    bc_ = b.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    cc_ = c.reshape(bsz, nc, chunk, g, n).astype(jnp.float32)
+    xf = xdt.astype(jnp.float32)
+
+    da_cum = jnp.cumsum(da, axis=2)                         # (B,C,L,G,H)
+
+    # intra-chunk (diagonal blocks): decay matrix L then dual attention
+    lmat = jnp.exp(_segsum(da.transpose(0, 1, 3, 4, 2)))    # (B,C,G,H,L,S)
+    y_diag = jnp.einsum("bclgn,bcsgn,bcghls,bcsghp->bclghp",
+                        cc_, bc_, lmat, xf)
+
+    # per-chunk input -> end-of-chunk state
+    da_last = da_cum[:, :, -1:]                             # (B,C,1,G,H)
+    decay_states = jnp.exp(da_last - da_cum)                # (B,C,L,G,H)
+    states = jnp.einsum("bclgn,bclgh,bclghp->bcghpn",
+                        bc_, decay_states, xf)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(da_last[:, :, 0])                 # (B,C,G,H)
+    init = (initial_state.astype(jnp.float32) if initial_state is not None
+            else jnp.zeros((bsz, g, hg, p, n), jnp.float32))
+
+    def scan_fn(prev, inp):
+        st, dec = inp
+        new = prev * dec[..., None, None] + st
+        return new, prev                    # emit state ENTERING the chunk
+
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, init,
+        (states.transpose(1, 0, 2, 3, 4, 5),
+         chunk_decay.transpose(1, 0, 2, 3)))
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4, 5)   # (B,C,G,H,P,N)
+
+    # contribution of the incoming state to each position
+    state_decay = jnp.exp(da_cum)                           # (B,C,L,G,H)
+    y_off = jnp.einsum("bclgn,bcghpn,bclgh->bclghp",
+                       cc_, prev_states, state_decay)
+
+    y = (y_diag + y_off).reshape(bsz, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_naive(x, dt, a_log, b, c,
+              initial_state=None) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Step-by-step recurrence oracle (fp32)."""
+    bsz, s, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    hg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    state = (initial_state.astype(jnp.float32) if initial_state is not None
+             else jnp.zeros((bsz, g, hg, p, n), jnp.float32))
+    ys = []
+    for t in range(s):
+        xt = (x[:, t] * dt[:, t, :, None]).astype(jnp.float32)
+        xt = xt.reshape(bsz, g, hg, p)
+        da = jnp.exp(dt[:, t].astype(jnp.float32) * a).reshape(bsz, g, hg)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bgn,bghp->bghpn", b[:, t].astype(jnp.float32), xt)
+        yt = jnp.einsum("bgn,bghpn->bghp", c[:, t].astype(jnp.float32),
+                        state)
+        ys.append(yt.reshape(bsz, h, p))
+    return jnp.stack(ys, axis=1).astype(x.dtype), state
+
+
+def ssd_decode_step(x, dt, a_log, b, c, state
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One-token recurrence.  x: (B,H,P); dt: (B,H); b/c: (B,G,N);
+    state: (B,G,H/G,P,N)."""
+    bsz, h, p = x.shape
+    g, n = b.shape[1], b.shape[2]
+    hg = h // g
+    a = -jnp.exp(a_log.astype(jnp.float32))
+    da = jnp.exp(dt.astype(jnp.float32) * a).reshape(bsz, g, hg)
+    xdt = (x * dt[..., None]).astype(jnp.float32).reshape(bsz, g, hg, p)
+    state = state * da[..., None, None] + jnp.einsum(
+        "bgn,bghp->bghpn", b.astype(jnp.float32), xdt)
+    y = jnp.einsum("bgn,bghpn->bghp", c.astype(jnp.float32), state)
+    return y.reshape(bsz, h, p).astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Full Mamba2 block (projections + causal conv + SSD + gated norm).
+# ---------------------------------------------------------------------------
+
+def _causal_conv(u: jnp.ndarray, w: jnp.ndarray,
+                 bias: jnp.ndarray) -> jnp.ndarray:
+    """Depthwise causal conv, kernel size K: (B,S,C) x (K,C) -> (B,S,C)."""
+    ksize = w.shape[0]
+    out = u * w[-1]
+    for i in range(1, ksize):
+        shifted = jnp.pad(u, ((0, 0), (i, 0), (0, 0)))[:, :u.shape[1]]
+        out = out + shifted * w[ksize - 1 - i]
+    return out + bias
+
+
+def _conv_step(u_new: jnp.ndarray, conv_state: jnp.ndarray, w: jnp.ndarray,
+               bias: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Decode: u_new (B,C); conv_state (B,K-1,C)."""
+    window = jnp.concatenate([conv_state, u_new[:, None, :]], axis=1)
+    out = jnp.einsum("bkc,kc->bc", window, w) + bias
+    return out, window[:, 1:]
+
+
+def mamba_block(params: Dict, x: jnp.ndarray, cfg,
+                state: Optional[Dict] = None
+                ) -> Tuple[jnp.ndarray, Dict]:
+    """Pre-norm Mamba2 block with residual.  x: (B,S,D) (train/prefill) or
+    (B,1,D) with ``state`` (decode)."""
+    d_in = cfg.d_inner
+    gn = cfg.ssm_ngroups * cfg.ssm_state
+    h = cfg.ssm_heads
+    p = cfg.ssm_headdim
+    g = cfg.ssm_ngroups
+    n = cfg.ssm_state
+    bsz, s, _ = x.shape
+
+    hidden = rmsnorm(x, params["in_norm"], cfg.norm_eps)
+    zx = hidden @ params["w_zx"]                      # (B,S,2*din)
+    z, xin = jnp.split(zx, 2, axis=-1)
+    bc = hidden @ params["w_bc"]                      # (B,S,2gn)
+    dt_raw = hidden @ params["w_dt"]                  # (B,S,H)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"].astype(jnp.float32))
+
+    conv_in = jnp.concatenate([xin, bc], axis=-1)     # (B,S,conv_dim)
+    new_state: Dict = {}
+    if state is None:
+        conv_out = _causal_conv(conv_in, params["conv_w"], params["conv_b"])
+    else:
+        conv_out, conv_state = _conv_step(
+            conv_in[:, 0], state["conv"], params["conv_w"],
+            params["conv_b"])
+        conv_out = conv_out[:, None, :]
+        new_state["conv"] = conv_state
+    conv_out = jax.nn.silu(conv_out)
+    xc, bmat, cmat = jnp.split(conv_out, [d_in, d_in + gn], axis=-1)
+
+    if state is None:
+        y, final = ssd_chunked(
+            xc.reshape(bsz, s, h, p), dt, params["a_log"],
+            bmat.reshape(bsz, s, g, n), cmat.reshape(bsz, s, g, n),
+            cfg.ssm_chunk)
+        new_state["ssm"] = final
+        # conv state = last (K-1) raw conv inputs, left-padded if short
+        k1 = cfg.ssm_conv - 1
+        if s >= k1:
+            new_state["conv"] = conv_in[:, -k1:, :]
+        else:
+            new_state["conv"] = jnp.pad(
+                conv_in, ((0, 0), (k1 - s, 0), (0, 0)))
+    else:
+        yd, ssm_state = ssd_decode_step(
+            xc[:, 0].reshape(bsz, h, p), dt[:, 0],
+            params["a_log"], bmat[:, 0].reshape(bsz, g, n),
+            cmat[:, 0].reshape(bsz, g, n), state["ssm"])
+        y = yd[:, None]
+        new_state["ssm"] = ssm_state
+
+    y = y + params["d_skip"].astype(y.dtype)[:, None] * \
+        (xc.reshape(bsz, s, h, p) if state is None
+         else xc.reshape(bsz, 1, h, p))
+    y = y.reshape(bsz, s, d_in)
+    y = y * jax.nn.silu(z)
+    y = rmsnorm(y, params["gate_norm"], cfg.norm_eps)
+    out = y @ params["w_out"]
+    return x + out, new_state

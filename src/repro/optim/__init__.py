@@ -1,0 +1,3 @@
+"""Optimizer substrate (pure JAX, no external deps)."""
+from .adamw import (AdamWConfig, adamw_init, adamw_update,  # noqa: F401
+                    cosine_schedule, global_norm)

@@ -1,0 +1,122 @@
+"""Logical-axis sharding: one rule table maps model-level axis names onto
+mesh axes (DP/FSDP/TP/SP/EP), with automatic divisibility fallback.
+
+Models annotate parameters and activations with *logical* names; the
+launcher binds a mesh + rule table via :func:`sharding_context`.  Outside a
+context every constraint is a no-op, so the same model code runs on one
+CPU device (smoke tests) and on the 512-chip production mesh (dry-run).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# Logical axis -> tuple of mesh axes.  'pod' only exists on the multi-pod
+# mesh; missing mesh axes are dropped at resolution time.
+DEFAULT_RULES: Dict[str, Tuple[str, ...]] = {
+    # parameter axes
+    "embed": ("data",),        # FSDP (ZeRO-3) over the data axis
+    "vocab": ("model",),
+    "heads": ("model",),
+    "kv": ("model",),
+    "mlp": ("model",),
+    "expert": ("model",),
+    "ssm_inner": ("model",),
+    "conv_dim": ("model",),
+    # activation axes
+    "batch": ("pod", "data"),
+    "seq": ("model",),         # sequence parallelism on the residual stream
+    "act_heads": ("model",),
+    "kv_seq": ("model",),      # decode KV-cache sequence sharding
+    "act_vocab": ("model",),
+    "act_expert": ("model",),
+}
+
+
+@dataclasses.dataclass
+class ShardingCtx:
+    mesh: Mesh
+    rules: Dict[str, Tuple[str, ...]]
+
+
+_TLS = threading.local()
+
+
+def current_ctx() -> Optional[ShardingCtx]:
+    return getattr(_TLS, "ctx", None)
+
+
+@contextlib.contextmanager
+def sharding_context(mesh: Mesh,
+                     rules: Optional[Dict[str, Tuple[str, ...]]] = None):
+    prev = current_ctx()
+    _TLS.ctx = ShardingCtx(mesh, dict(rules or DEFAULT_RULES))
+    try:
+        with mesh:
+            yield _TLS.ctx
+    finally:
+        _TLS.ctx = prev
+
+
+def _resolve_dim(name: Optional[str], size: int, mesh: Mesh,
+                 rules: Dict[str, Tuple[str, ...]]):
+    """Mesh axes for one logical dim; falls back to replication when the
+    dim size does not divide the mesh extent (e.g. 14 heads on 16-way TP)."""
+    if name is None:
+        return None
+    axes = tuple(a for a in rules.get(name, ()) if a in mesh.shape)
+    if not axes:
+        return None
+    extent = int(np.prod([mesh.shape[a] for a in axes]))
+    if size % extent != 0:
+        # try a prefix of the axes (e.g. drop 'data' keep 'pod')
+        for end in range(len(axes) - 1, 0, -1):
+            sub = axes[:end]
+            ext = int(np.prod([mesh.shape[a] for a in sub]))
+            if size % ext == 0:
+                return sub if len(sub) > 1 else sub[0]
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def spec_for(logical: Sequence[Optional[str]], shape: Sequence[int],
+             mesh: Mesh, rules: Dict[str, Tuple[str, ...]]) -> P:
+    assert len(logical) == len(shape), (logical, shape)
+    used = set()
+    parts = []
+    for name, size in zip(logical, shape):
+        r = _resolve_dim(name, size, mesh, rules)
+        # a mesh axis may appear at most once in a spec
+        if r is not None:
+            axes = (r,) if isinstance(r, str) else tuple(r)
+            if any(a in used for a in axes):
+                r = None
+            else:
+                used.update(axes)
+        parts.append(r)
+    return P(*parts)
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint via logical names; no-op outside a ctx."""
+    ctx = current_ctx()
+    if ctx is None:
+        return x
+    spec = spec_for(logical, x.shape, ctx.mesh, ctx.rules)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, spec))
+
+
+def named_sharding(logical: Sequence[Optional[str]], shape: Sequence[int],
+                   ctx: Optional[ShardingCtx] = None) -> NamedSharding:
+    ctx = ctx or current_ctx()
+    assert ctx is not None, "named_sharding requires a sharding context"
+    return NamedSharding(ctx.mesh,
+                         spec_for(logical, shape, ctx.mesh, ctx.rules))

@@ -1,0 +1,3 @@
+"""Distributed-runtime substrate: health, stragglers, elasticity."""
+from .health import (ElasticPlan, HeartbeatMonitor,  # noqa: F401
+                     StragglerDetector, plan_elastic_remesh)

@@ -1,0 +1,105 @@
+"""Cycle-model checks against Table II and Section II-B."""
+import numpy as np
+import pytest
+
+from repro.core import MVEConfig, cost
+from repro.core.isa import DType, Op
+
+
+def test_table2_bit_serial_latencies():
+    cfg = MVEConfig(scheme="bs")
+    n = 32
+    dt = DType.DW
+    assert cost.compute_cycles(Op.ADD, dt, cfg) == n
+    assert cost.compute_cycles(Op.SUB, dt, cfg) == 2 * n
+    assert cost.compute_cycles(Op.MUL, dt, cfg) == n * n + 5 * n
+    assert cost.compute_cycles(Op.MIN, dt, cfg) == 2 * n
+    assert cost.compute_cycles(Op.XOR, dt, cfg) == n
+    assert cost.compute_cycles(Op.SHI, dt, cfg) == n
+    assert cost.compute_cycles(Op.SHR, dt, cfg) == n * np.log2(n)
+    assert cost.compute_cycles(Op.CPY, dt, cfg) == n
+    assert cost.compute_cycles(Op.GT, dt, cfg) == n
+
+
+def test_precision_quadratic_for_mul():
+    """Section VII-E: bit-serial multiply is O(n^2) in precision."""
+    cfg = MVEConfig()
+    c8 = cost.compute_cycles(Op.MUL, DType.B, cfg)
+    c32 = cost.compute_cycles(Op.MUL, DType.DW, cfg)
+    assert 10 < c32 / c8 < 18          # (32^2+160)/(64+40) ~ 11.4
+
+
+def test_bp_bh_latency_ordering():
+    """BP < BH < BS latency; BP has 1/n lanes, BH 1/p (Section II-B)."""
+    bs, bp = MVEConfig(scheme="bs"), MVEConfig(scheme="bp")
+    bh = MVEConfig(scheme="bh", bh_segment_bits=4)
+    dt = DType.DW
+    assert cost.compute_cycles(Op.MUL, dt, bp) < \
+        cost.compute_cycles(Op.MUL, dt, bh) < \
+        cost.compute_cycles(Op.MUL, dt, bs)
+    assert bp.effective_lanes(32) == bs.lanes // 32
+    assert bh.effective_lanes(32) == bs.lanes // 4
+
+
+def test_ac_arithmetic_4_to_8x_slower_than_bs():
+    """Section VII-C: AC arithmetic latency is 4-8x BS."""
+    bs, ac = MVEConfig(scheme="bs"), MVEConfig(scheme="ac")
+    for op in (Op.ADD, Op.MUL):
+        r = cost.compute_cycles(op, DType.DW, ac) / \
+            cost.compute_cycles(op, DType.DW, bs)
+        assert 3.5 <= r <= 8.5, (op, r)
+    # ...but O(1)-ish logical ops are AC's strength
+    assert cost.compute_cycles(Op.XOR, DType.DW, ac) < \
+        cost.compute_cycles(Op.XOR, DType.DW, bs)
+
+
+def test_float_ops_cost_more():
+    cfg = MVEConfig()
+    assert cost.compute_cycles(Op.ADD, DType.F, cfg) > \
+        cost.compute_cycles(Op.ADD, DType.DW, cfg)
+
+
+def test_timeline_memory_barrier():
+    """Vector memory accesses serialize across CBs (Section V-B)."""
+    from repro.core.interp import TraceEvent
+    cfg = MVEConfig()
+    ncb = cfg.num_cbs
+    full = np.ones(ncb, bool)
+    half = np.zeros(ncb, bool)
+    half[: ncb // 2] = True
+    trace = [
+        TraceEvent(Op.ADD, DType.DW, cfg.lanes, half),
+        TraceEvent(Op.SLD, DType.DW, cfg.lanes, full, segments=1,
+                   contiguous_run=cfg.lanes),
+        TraceEvent(Op.ADD, DType.DW, cfg.lanes, full),
+    ]
+    tl = cost.simulate(trace, cfg)
+    # the load blocks everything: total >= compute-before + load + after
+    assert tl.total_cycles >= tl.data_cycles + 2 * \
+        cost.compute_cycles(Op.ADD, DType.DW, cfg) - 1e-6
+
+
+def test_breakdown_fractions_sum():
+    from repro.core.patterns import PATTERNS
+    from repro.core import MVEInterpreter
+    run = PATTERNS["daxpy"]()
+    _, state = MVEInterpreter().run(run.program, run.memory)
+    tl = cost.simulate(state.trace, MVEConfig())
+    bd = cost.breakdown(tl)
+    assert 0.99 < sum(bd.values()) < 1.01
+    assert all(v >= 0 for v in bd.values())
+
+
+def test_neon_model_lower_precision_scales_linearly():
+    neon = cost.NeonModel()
+    c8 = neon.kernel_cycles(2, 1024, 8, 0)
+    c32 = neon.kernel_cycles(2, 1024, 32, 0)
+    assert abs(c32 / c8 - 4.0) < 0.01
+
+
+def test_gpu_model_launch_overhead_dominates_small_kernels():
+    gpu = cost.GPUModel()
+    small = gpu.kernel_us(flops=1e4, copy_bytes=1e3)
+    assert small < gpu.launch_overhead_us * 1.2
+    big = gpu.kernel_us(flops=1e10, copy_bytes=1e6)
+    assert big > 10 * small

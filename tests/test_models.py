@@ -1,0 +1,153 @@
+"""Per-architecture smoke tests (reduced configs): one forward/train step
+on CPU asserting output shapes + no NaNs, plus prefill/decode consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import LM
+
+KEY = jax.random.PRNGKey(0)
+B, S = 2, 32
+
+
+def _batch(cfg, s=S):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, s), 1, cfg.vocab_size),
+        "targets": jax.random.randint(KEY, (B, s), 1, cfg.vocab_size),
+        "loss_mask": jnp.ones((B, s), jnp.float32),
+        "positions": jnp.tile(jnp.arange(s), (B, 1)),
+        "segment_ids": jnp.ones((B, s), jnp.int32),
+    }
+    if cfg.family == "vlm":
+        batch["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_config(arch, reduced=True)
+    model = LM(cfg)
+    params = model.init_params(KEY)
+    loss, metrics = jax.jit(model.loss)(params, _batch(cfg))
+    assert loss.shape == ()
+    assert np.isfinite(float(loss))
+    assert float(metrics["tokens"]) == B * S
+    # gradients finite too
+    grads = jax.grad(lambda p: model.loss(p, _batch(cfg))[0])(params)
+    gn = float(jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                            for g in jax.tree.leaves(grads))))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_prefill_decode_consistency(arch):
+    cfg = get_config(arch, reduced=True)
+    if cfg.family == "moe":
+        # lossless dispatch: capacity dropping legitimately differs
+        # between prefill-sized and decode-sized routing groups
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    model = LM(cfg)
+    params = model.init_params(KEY)
+    cache_s = S + 8
+    toks = jax.random.randint(KEY, (B, cache_s), 1, cfg.vocab_size)
+    extras = {}
+    if cfg.family == "vlm":
+        extras["image_embeds"] = jax.random.normal(
+            KEY, (B, cfg.num_image_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        extras["frames"] = jax.random.normal(
+            KEY, (B, cfg.num_frames, cfg.d_model), jnp.bfloat16)
+
+    def prefill(n):
+        batch = {"tokens": toks[:, :n],
+                 "positions": jnp.tile(jnp.arange(n), (B, 1)), **extras}
+        return model.prefill(params, batch)
+
+    logits, cache = prefill(S)
+    # pad attention caches to cache_s
+    def pad(c):
+        out = {}
+        for k, v in c.items():
+            if k in ("k", "v", "shared_k", "shared_v") and v.shape[2] == S:
+                pad_w = [(0, 0)] * v.ndim
+                pad_w[2] = (0, cache_s - S)
+                out[k] = jnp.pad(v, pad_w)
+            else:
+                out[k] = v
+        return out
+    cache = pad(cache)
+
+    for t in range(S, S + 2):
+        dl, cache = model.decode_step(params, cache, toks[:, t:t + 1],
+                                      jnp.int32(t))
+        want, _ = prefill(t + 1)
+        np.testing.assert_allclose(
+            np.asarray(dl, np.float32), np.asarray(want, np.float32),
+            rtol=4e-2, atol=4e-2)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_count_analytic_matches_materialized(arch):
+    """ModelConfig.param_count() (used for MODEL_FLOPS) must track the
+    real parameter tree within 2%."""
+    cfg = get_config(arch, reduced=True)
+    model = LM(cfg)
+    abstract = model.abstract_params()
+    actual = sum(int(np.prod(a.shape)) for a in jax.tree.leaves(abstract))
+    analytic = cfg.param_count()
+    assert abs(actual - analytic) / actual < 0.02, (actual, analytic)
+
+
+def test_full_configs_match_assignment():
+    """The full configs carry the exact published dimensions."""
+    checks = {
+        "qwen2-72b": dict(num_layers=80, d_model=8192, num_heads=64,
+                          num_kv_heads=8, d_ff=29568, vocab_size=152064),
+        "qwen2-0.5b": dict(num_layers=24, d_model=896, num_heads=14,
+                           num_kv_heads=2, d_ff=4864, vocab_size=151936),
+        "nemotron-4-15b": dict(num_layers=32, d_model=6144, num_heads=48,
+                               num_kv_heads=8, d_ff=24576,
+                               vocab_size=256000,
+                               activation="squared_relu"),
+        "granite-34b": dict(num_layers=88, d_model=6144, num_heads=48,
+                            num_kv_heads=1, d_ff=24576, vocab_size=49152),
+        "llama4-scout-17b-a16e": dict(num_layers=48, d_model=5120,
+                                      num_heads=40, num_kv_heads=8,
+                                      d_ff=8192, vocab_size=202048,
+                                      num_experts=16, experts_per_token=1),
+        "arctic-480b": dict(num_layers=35, d_model=7168, num_heads=56,
+                            num_kv_heads=8, d_ff=4864, vocab_size=32000,
+                            num_experts=128, experts_per_token=2),
+        "mamba2-2.7b": dict(num_layers=64, d_model=2560, d_ff=0,
+                            vocab_size=50280, ssm_state=128),
+        "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32,
+                            num_kv_heads=32, d_ff=10240, vocab_size=32000,
+                            ssm_state=64),
+        "llama-3.2-vision-11b": dict(num_layers=40, d_model=4096,
+                                     num_heads=32, num_kv_heads=8,
+                                     d_ff=14336, vocab_size=128256),
+        "whisper-base": dict(num_layers=6, d_model=512, num_heads=8,
+                             num_kv_heads=8, d_ff=2048, vocab_size=51865,
+                             encoder_layers=6),
+    }
+    for arch, expect in checks.items():
+        cfg = get_config(arch)
+        for k, v in expect.items():
+            assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("arctic-480b")
+    assert cfg.active_param_count() < 0.2 * cfg.param_count()
+    # arctic really is ~480B total
+    assert 4.0e11 < cfg.param_count() < 5.6e11
+    q = get_config("qwen2-72b")
+    assert 6.8e10 < q.param_count() < 8.2e10

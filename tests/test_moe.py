@@ -1,0 +1,106 @@
+"""MoE dispatch: GShard grouped top-k vs per-token dense oracle."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.common import materialize_tree
+from repro.models.lm import _moe_defs
+from repro.models.moe import moe_ffn
+
+RNG = np.random.default_rng(2)
+
+
+def _setup(k, e=8, capacity_factor=16.0):
+    cfg = get_config("arctic-480b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_experts=e, experts_per_token=k,
+                              capacity_factor=capacity_factor,
+                              moe_dense_residual=False,
+                              moe_group_size=32)
+    defs = _moe_defs(cfg, 1)
+    params = materialize_tree(defs, jax.random.PRNGKey(0))
+    params = jax.tree.map(lambda a: a[0].astype(jnp.float32), params)
+    return cfg, params
+
+
+def _oracle(params, x, cfg):
+    """Per-token dense computation with the same top-k renormalized gates."""
+    b, s, d = x.shape
+    xt = np.asarray(x).reshape(-1, d)
+    router = np.asarray(params["router"], np.float64)
+    probs = jax.nn.softmax(jnp.asarray(xt @ router), axis=-1)
+    probs = np.asarray(probs)
+    out = np.zeros_like(xt)
+    k = cfg.experts_per_token
+    wi = np.asarray(params["wi"], np.float64)
+    wg = np.asarray(params["wg"], np.float64)
+    wo = np.asarray(params["wo"], np.float64)
+    for t in range(xt.shape[0]):
+        idx = np.argsort(-probs[t])[:k]
+        gates = probs[t, idx]
+        gates = gates / gates.sum()
+        for e_i, gate in zip(idx, gates):
+            h = xt[t] @ wi[e_i]
+            h = h / (1 + np.exp(-h))            # silu
+            h = h * (xt[t] @ wg[e_i])
+            out[t] += gate * (h @ wo[e_i])
+    return out.reshape(b, s, d)
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_moe_matches_dense_oracle_lossless(k):
+    cfg, params = _setup(k)
+    x = jnp.asarray(RNG.standard_normal((2, 16, cfg.d_model))
+                    .astype(np.float32)) * 0.5
+    got, aux = moe_ffn(params, x, cfg)
+    want = _oracle(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=2e-3, atol=2e-3)
+    assert float(aux) > 0
+
+
+def test_capacity_drops_tokens():
+    """With a tiny capacity factor some tokens are dropped (output 0)."""
+    cfg, params = _setup(k=1, capacity_factor=0.10)
+    x = jnp.asarray(RNG.standard_normal((1, 32, cfg.d_model))
+                    .astype(np.float32))
+    got, _ = moe_ffn(params, x, cfg)
+    lossless = _oracle(params, x, cfg)
+    norms_got = np.linalg.norm(np.asarray(got).reshape(32, -1), axis=1)
+    dropped = (norms_got < 1e-6).sum()
+    assert dropped > 0
+    # kept tokens still match the oracle
+    kept = norms_got > 1e-6
+    np.testing.assert_allclose(np.asarray(got).reshape(32, -1)[kept],
+                               lossless.reshape(32, -1)[kept],
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_aux_loss_uniform_router_is_one():
+    """Balanced routing gives aux = E * E*(1/E)*(1/E) = 1."""
+    cfg, params = _setup(k=1)
+    params = dict(params)
+    params["router"] = jnp.zeros_like(params["router"])   # uniform probs
+    x = jnp.asarray(RNG.standard_normal((1, 64, cfg.d_model))
+                    .astype(np.float32))
+    _, aux = moe_ffn(params, x, cfg)
+    # frac concentrates on argmax=expert 0 with zero logits (ties) but
+    # mean_prob is uniform -> aux = E * sum_e frac_e * (1/E) = 1
+    assert abs(float(aux) - 1.0) < 1e-5
+
+
+def test_shared_expert_added():
+    cfg, params = _setup(k=1)
+    cfg = dataclasses.replace(cfg, moe_shared_expert=True)
+    defs = _moe_defs(cfg, 1)
+    params2 = materialize_tree(defs, jax.random.PRNGKey(0))
+    params2 = jax.tree.map(lambda a: a[0].astype(jnp.float32), params2)
+    x = jnp.asarray(RNG.standard_normal((1, 8, cfg.d_model))
+                    .astype(np.float32))
+    with_shared, _ = moe_ffn(params2, x, cfg)
+    params_no = {k: v for k, v in params2.items() if k != "shared"}
+    cfg_no = dataclasses.replace(cfg, moe_shared_expert=False)
+    without, _ = moe_ffn(params_no, x, cfg_no)
+    assert not np.allclose(np.asarray(with_shared), np.asarray(without))

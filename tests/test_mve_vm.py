@@ -1,0 +1,210 @@
+"""MVE virtual-machine semantics vs a straight-loop numpy oracle."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import MVEConfig, MVEInterpreter, isa
+from repro.core.isa import DType
+from repro.core.machine import (ControlState, cbs_touched, flatten_indices,
+                                lane_dim_mask)
+
+CFG = MVEConfig()
+INTERP = MVEInterpreter(CFG)
+
+
+def oracle_strided_load(mem, base, dims, strides, lanes):
+    """Algorithm 1 as literal nested loops."""
+    out = np.zeros(lanes)
+    total = int(np.prod(dims))
+    for lane in range(min(total, lanes)):
+        rem, addr = lane, base
+        for d, (ln, s) in enumerate(zip(dims, strides)):
+            addr += (rem % ln) * s
+            rem //= ln
+        out[lane] = mem[addr]
+    return out, min(total, lanes)
+
+
+@st.composite
+def dims_and_strides(draw):
+    ndim = draw(st.integers(1, 4))
+    dims, strides = [], []
+    total = 1
+    for d in range(ndim):
+        ln = draw(st.integers(1, 8))
+        total *= ln
+        dims.append(ln)
+        strides.append(draw(st.sampled_from([0, 1, 2, 3, 5, 7])))
+    return dims, strides
+
+
+@settings(max_examples=25, deadline=None)
+@given(dims_and_strides(), st.integers(0, 16))
+def test_strided_load_matches_oracle(ds, base):
+    dims, strides = ds
+    span = base + sum((l - 1) * s for l, s in zip(dims, strides)) + 1
+    mem = np.arange(span + 4, dtype=np.float64) * 1.5 + 3
+    prog = [isa.vsetdimc(len(dims))]
+    for d, ln in enumerate(dims):
+        prog.append(isa.vsetdiml(d, ln))
+    for d, s in enumerate(strides):
+        prog.append(isa.vsetldstr(d, s))
+    prog.append(isa.vsld(DType.F, 0, base, *([3] * len(dims))))
+    _, state = INTERP.run(prog, mem)
+    got = np.asarray(state.regs[0])
+    want, n = oracle_strided_load(mem, base, dims, strides, CFG.lanes)
+    np.testing.assert_allclose(got[:n], want[:n].astype(np.float32),
+                               rtol=1e-6)
+
+
+def test_stride_modes():
+    """Mode 0 -> 0, mode 1 -> 1, mode 2 -> derived, mode 3 -> CR."""
+    ctrl = ControlState()
+    ctrl.dim_count = 3
+    ctrl.dim_lens[:3] = [4, 5, 6]
+    ctrl.ld_strides[:3] = [9, 9, 9]
+    assert ctrl.resolve_strides((1, 2, 2), False) == (1, 4, 20)
+    assert ctrl.resolve_strides((0, 1, 3), False) == (0, 1, 9)
+    assert ctrl.resolve_strides((3, 0, 2), False) == (9, 0, 0)
+
+
+def test_replication_stride_zero():
+    """S=0 replicates an element across a dimension (Figure 3)."""
+    mem = np.arange(64, dtype=np.float64)
+    prog = [isa.vsetdimc(2), isa.vsetdiml(0, 3), isa.vsetdiml(1, 5),
+            isa.vsld(DType.F, 0, 10, 1, 0)]
+    _, state = INTERP.run(prog, mem)
+    got = np.asarray(state.regs[0][:15]).reshape(5, 3)
+    for row in got:
+        np.testing.assert_array_equal(row, [10, 11, 12])
+
+
+def test_random_load_eq1():
+    """Equation 1: random base per highest-dim element, strided inner."""
+    mem = np.zeros(256)
+    mem[:100] = np.arange(100) * 2
+    ptrs = [40, 7, 22]
+    mem[200:203] = ptrs
+    prog = [isa.vsetdimc(2), isa.vsetdiml(0, 4), isa.vsetdiml(1, 3),
+            isa.vrld(DType.F, 0, 200, 1)]
+    _, state = INTERP.run(prog, mem)
+    got = np.asarray(state.regs[0][:12]).reshape(3, 4)
+    for w, p in enumerate(ptrs):
+        np.testing.assert_array_equal(got[w], mem[p:p + 4])
+
+
+def test_dimension_level_masking():
+    """vunsetmask drops whole highest-dim elements from stores."""
+    mem = np.zeros(64)
+    mem[:32] = np.arange(32)
+    prog = [isa.vsetdimc(2), isa.vsetdiml(0, 8), isa.vsetdiml(1, 4),
+            isa.vsld(DType.F, 0, 0, 1, 2),
+            isa.vunsetmask(1), isa.vunsetmask(3),
+            isa.vsst(DType.F, 0, 32, 1, 2)]
+    mem_after, _ = INTERP.run(prog, mem)
+    mem_after = np.asarray(mem_after)
+    np.testing.assert_array_equal(mem_after[32:40], np.arange(8))   # w=0
+    np.testing.assert_array_equal(mem_after[40:48], 0)              # w=1 off
+    np.testing.assert_array_equal(mem_after[48:56], np.arange(16, 24))
+    np.testing.assert_array_equal(mem_after[56:64], 0)              # w=3 off
+
+
+def test_masked_compute_preserves_old_value():
+    mem = np.zeros(64)
+    prog = [isa.vsetdimc(2), isa.vsetdiml(0, 4), isa.vsetdiml(1, 4),
+            isa.vsetdup(DType.DW, 0, 5),
+            isa.vunsetmask(2),
+            isa.vsetdup(DType.DW, 0, 9)]
+    _, state = INTERP.run(prog, mem)
+    got = np.asarray(state.regs[0][:16]).reshape(4, 4)
+    np.testing.assert_array_equal(got[2], 5)        # masked kept old
+    np.testing.assert_array_equal(got[0], 9)
+
+
+def test_predicated_execution_tag_latch():
+    mem = np.zeros(8)
+    prog = [isa.vsetdimc(1), isa.vsetdiml(0, 8),
+            isa.vsetdup(DType.DW, 0, 3),
+            isa.vsetdup(DType.DW, 1, 0)]
+    # lane-varying value via strided load of iota
+    mem[:8] = np.arange(8)
+    prog += [isa.vsld(DType.DW, 1, 0, 1),
+             isa.vcmp(isa.Op.GT, DType.DW, 1, 0),     # tag = (iota > 3)
+             isa.vsetdup(DType.DW, 2, 1),
+             isa.vadd(DType.DW, 1, 1, 2, predicated=True)]
+    _, state = INTERP.run(prog, mem)
+    got = np.asarray(state.regs[1][:8])
+    want = np.arange(8) + (np.arange(8) > 3)
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("dtype,start,wrap", [
+    (DType.B, 255, 256),          # unsigned byte wraps 255+2 -> 1
+    (DType.W, 32767, 65536),      # signed 16-bit wraps to negative
+])
+def test_integer_wraparound(dtype, start, wrap):
+    mem = np.zeros(8)
+    mem[0] = start
+    prog = [isa.vsetdimc(1), isa.vsetdiml(0, 4),
+            isa.vsld(dtype, 0, 0, 0),          # replicate mem[0]
+            isa.vsetdup(dtype, 1, 2),
+            isa.vadd(dtype, 2, 0, 1)]
+    _, state = INTERP.run(prog, mem)
+    got = int(np.asarray(state.regs[2][0]).astype(np.int64)) % wrap
+    assert got == (start + 2) % wrap
+
+
+def test_flatten_indices_bijective():
+    dims = (3, 4, 5)
+    coords = flatten_indices(dims, 128)
+    total = 60
+    recon = (coords[:total, 0] + coords[:total, 1] * 3 +
+             coords[:total, 2] * 12)
+    np.testing.assert_array_equal(recon, np.arange(total))
+    assert (coords[total:] == -1).all()
+
+
+def test_cb_masking_skips_blocks():
+    """A fully-masked CB never participates (Section V-B bit-vector)."""
+    ctrl_mask = np.ones(256, dtype=bool)
+    ctrl_mask[0] = False
+    dims = (CFG.lanes_per_cb, 8)   # each top element spans exactly one CB
+    cbm = cbs_touched(dims, ctrl_mask, CFG)
+    assert not cbm[0] and cbm[1:].all()
+
+
+def test_variable_register_count():
+    assert CFG.num_physical_registers(32) == 8
+    assert CFG.num_physical_registers(8) == 32
+    assert CFG.effective_lanes(32) == 8192
+
+
+def test_remaining_ops_cvt_min_max_rot_shr():
+    """Coverage for vcvt/vmin/vmax/vroti/vshr semantics."""
+    mem = np.zeros(64)
+    mem[:8] = [5, -3, 7, 0, 2, 9, -8, 4]
+    mem[8:16] = [1, 1, 2, 2, 0, 3, 1, 0]
+    prog = [isa.vsetdimc(1), isa.vsetdiml(0, 8),
+            isa.vsld(DType.DW, 0, 0, 1),
+            isa.vsld(DType.DW, 1, 8, 1),
+            isa.vmin(DType.DW, 2, 0, 1),
+            isa.vmax(DType.DW, 3, 0, 1),
+            isa.vshr_reg(DType.DW, 4, 0, 1),      # a << b
+            isa.vcvt(DType.F, 5, 0),
+            isa.Instr(isa.Op.ROTI, dtype=DType.DW, vd=6, vs1=0, imm=4)]
+    _, state = INTERP.run(prog, mem)
+    a = mem[:8].astype(np.int64)
+    b = mem[8:16].astype(np.int64)
+    np.testing.assert_array_equal(
+        np.asarray(state.regs[2][:8]), np.minimum(a, b))
+    np.testing.assert_array_equal(
+        np.asarray(state.regs[3][:8]), np.maximum(a, b))
+    np.testing.assert_array_equal(
+        np.asarray(state.regs[4][:8]).astype(np.int64),
+        (a.astype(np.int32) << b.astype(np.int32)))
+    np.testing.assert_allclose(np.asarray(state.regs[5][:8]),
+                               a.astype(np.float32))
+    want_rot = ((a.astype(np.uint32) << 4) |
+                (a.astype(np.uint32) >> 28)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(state.regs[6][:8]), want_rot)

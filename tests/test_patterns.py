@@ -1,0 +1,85 @@
+"""Section IV data-parallel patterns: correctness + ISA-comparison claims."""
+import numpy as np
+import pytest
+
+from repro.core import MVEConfig, MVEInterpreter, cost, rvv
+from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET
+
+INTERP = MVEInterpreter()
+
+
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_pattern_correct(name):
+    run = PATTERNS[name]()
+    mem_after, state = INTERP.run(run.program, run.memory)
+    run.check(np.asarray(mem_after), state)
+
+
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_rvv_lowering_counts(name):
+    """The 1D lowering must expand every multi-dim access into
+    (mask cfg + partial access + move) x segments (Section III-C)."""
+    run = PATTERNS[name]()
+    _, stats = rvv.compile_to_rvv(run.program)
+    mve = rvv.mve_stats(run.program)
+    assert stats.memory_instructions >= mve.memory_instructions
+    # every RVV partial access carries a mask/cfg and a move
+    assert stats.mask_instructions >= stats.memory_instructions - \
+        mve.memory_instructions
+    assert stats.vector_instructions >= mve.vector_instructions
+
+
+def test_multidim_patterns_speed_up():
+    """Figure 10: kernels whose accesses a 1D ISA cannot express in one
+    instruction (replication / random-base / multi-level strides) speed
+    up strongly; dense-collapsible patterns must at least never lose."""
+    cfg = MVEConfig()
+    strong = ("gemm", "upsample", "xor_cipher", "png_up", "intra_pred")
+    weak = ("transpose", "audio_mix", "alpha_blend")
+    for name in strong + weak:
+        run = PATTERNS[name]()
+        _, state = INTERP.run(run.program, run.memory)
+        mve_t = cost.simulate(state.trace, cfg).total_cycles
+        tr, _ = rvv.compile_to_rvv(run.program)
+        rvv_t = cost.simulate(tr, cfg).total_cycles
+        bound = 1.5 if name in strong else 1.0
+        assert rvv_t / mve_t > bound, (name, rvv_t / mve_t)
+
+
+def test_average_speedup_in_paper_band():
+    """Figures 10/13 (BS): paper reports 2.0x (kernel avg) to 3.8x
+    (scheme avg) MVE over RVV; our kernel set must land in that band."""
+    cfg = MVEConfig()
+    ratios = []
+    for name in RVV_COMPARISON_SET:
+        run = PATTERNS[name]()
+        _, state = INTERP.run(run.program, run.memory)
+        mve_t = cost.simulate(state.trace, cfg).total_cycles
+        tr, _ = rvv.compile_to_rvv(run.program)
+        ratios.append(cost.simulate(tr, cfg).total_cycles / mve_t)
+    geo = float(np.exp(np.mean(np.log(ratios))))
+    assert 2.0 < geo < 4.5, geo
+
+
+def test_lane_utilization_claim():
+    """Section VII-C: RVV drops BS lane utilization (paper: 23% vs 60%).
+    With our optimized-1D RVV baseline the gap is smaller but the
+    ordering and a sizeable margin must hold."""
+    cfg = MVEConfig()
+    mve_u, rvv_u = [], []
+    for name in RVV_COMPARISON_SET:
+        run = PATTERNS[name]()
+        _, state = INTERP.run(run.program, run.memory)
+        mve_u.append(cost.simulate(state.trace, cfg).lane_utilization)
+        tr, _ = rvv.compile_to_rvv(run.program)
+        rvv_u.append(cost.simulate(tr, cfg).lane_utilization)
+    assert np.mean(rvv_u) < 0.55
+    assert np.mean(mve_u) > 0.60
+    assert np.mean(mve_u) > 1.5 * np.mean(rvv_u)
+
+
+def test_transpose_iteration_count():
+    """Section IV: a 512x49 transpose takes 4 iterations (vs 49 in 1D)."""
+    run = PATTERNS["transpose"](m=512, n=49)
+    loads = [i for i in run.program if i.op.name == "SLD"]
+    assert len(loads) == 4

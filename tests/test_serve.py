@@ -1,0 +1,79 @@
+"""Continuous-batching engine: dimension-level masked serving."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.launch.serve import ContinuousBatchingEngine, Request
+from repro.models import LM
+
+KEY = jax.random.PRNGKey(3)
+
+
+@pytest.fixture(scope="module")
+def small_model():
+    cfg = get_config("qwen2-0.5b", reduced=True)
+    cfg = dataclasses.replace(cfg, num_layers=1)
+    model = LM(cfg)
+    params = model.init_params(KEY)
+    return cfg, model, params
+
+
+def _reference_decode(cfg, params, prompt, n_new):
+    """Single-request oracle: a fresh engine with ONE slot — the invariant
+    under test is that *batching with other requests never changes a
+    request's output* (slot/cache isolation via dimension-level masks).
+    (Greedy argmax is not stable between prefill- and decode-path bf16
+    numerics, so a prefill-based oracle would be flaky by construction.)"""
+    eng = ContinuousBatchingEngine(cfg, params, batch_slots=1, max_seq=32)
+    eng.submit(Request(rid=0, prompt=prompt, max_new_tokens=n_new))
+    done = eng.run_until_drained()
+    return done[0].output
+
+
+def test_all_requests_complete_and_match_reference(small_model):
+    cfg, model, params = small_model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(1, cfg.vocab_size, size=ln).astype(np.int32)
+               for ln in (3, 5, 4, 6, 3)]
+    engine = ContinuousBatchingEngine(cfg, params, batch_slots=2,
+                                      max_seq=32)
+    for i, p in enumerate(prompts):
+        engine.submit(Request(rid=i, prompt=p, max_new_tokens=4))
+    done = engine.run_until_drained()
+    assert sorted(done) == list(range(5))
+    for i, p in enumerate(prompts):
+        want = _reference_decode(cfg, params, p, 4)
+        assert done[i].output == want, (i, done[i].output, want)
+
+
+def test_dimension_level_masking_occupancy(small_model):
+    cfg, model, params = small_model
+    engine = ContinuousBatchingEngine(cfg, params, batch_slots=4,
+                                      max_seq=16)
+    assert engine.occupancy == 0.0
+    engine.submit(Request(rid=0, prompt=np.asarray([5, 6], np.int32),
+                          max_new_tokens=2))
+    engine.step()
+    assert engine.occupancy == pytest.approx(0.25)
+    # the grid mask is the MVE-style per-request (top-dim) mask
+    assert engine.grid.mask.sum() == 1
+    engine.run_until_drained()
+    assert engine.occupancy == 0.0
+
+
+def test_queueing_beyond_slots(small_model):
+    cfg, model, params = small_model
+    engine = ContinuousBatchingEngine(cfg, params, batch_slots=2,
+                                      max_seq=16)
+    for i in range(4):
+        engine.submit(Request(rid=i, prompt=np.asarray([2 + i], np.int32),
+                              max_new_tokens=2))
+    engine.step()
+    assert len(engine.grid.active_slots()) == 2   # only 2 resident
+    assert len(engine._queue) == 2
+    done = engine.run_until_drained()
+    assert len(done) == 4

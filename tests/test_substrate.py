@@ -1,0 +1,280 @@
+"""Substrate tests: optimizer, data pipeline, checkpoint, runtime, packing."""
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.checkpoint import (CheckpointManager, load_checkpoint,
+                              reshard_tree, save_checkpoint)
+from repro.checkpoint.store import latest_step
+from repro.core.packing import LaneGrid, pack_documents
+from repro.data import DataConfig, make_train_batches
+from repro.data.pipeline import SyntheticTextSource
+from repro.optim import AdamWConfig, adamw_init, adamw_update, cosine_schedule
+from repro.runtime import (HeartbeatMonitor, StragglerDetector,
+                           plan_elastic_remesh)
+
+
+# ---------------------------------------------------------------------------
+# optimizer
+# ---------------------------------------------------------------------------
+
+def test_adamw_matches_numpy_reference():
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, weight_decay=0.05,
+                      clip_norm=1e9, total_steps=100, min_lr_ratio=1.0)
+    p = {"w": jnp.asarray([1.0, -2.0, 3.0])}
+    g = {"w": jnp.asarray([0.1, 0.2, -0.3])}
+    state = adamw_init(p)
+    new_p, state, metrics = adamw_update(cfg, p, g, state)
+    # numpy reference
+    m = 0.1 * np.array([0.1, 0.2, -0.3])
+    v = 0.05 * np.array([0.1, 0.2, -0.3]) ** 2
+    mh, vh = m / 0.1, v / 0.05
+    want = np.array([1.0, -2.0, 3.0]) - 1e-2 * (
+        mh / (np.sqrt(vh) + 1e-8) + 0.05 * np.array([1.0, -2.0, 3.0]))
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-5)
+    assert float(metrics["grad_norm"]) > 0
+
+
+def test_adamw_clipping():
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, clip_norm=0.1,
+                      weight_decay=0.0)
+    p = {"w": jnp.ones(4)}
+    g = {"w": jnp.full(4, 100.0)}
+    state = adamw_init(p)
+    new_p, _, metrics = adamw_update(cfg, p, g, state)
+    assert float(metrics["grad_norm"]) == pytest.approx(200.0)
+    # clipped update is bounded by lr * (1 + wd-ish)
+    assert np.abs(np.asarray(new_p["w"]) - 1.0).max() < 0.02
+
+
+def test_cosine_schedule_shape():
+    cfg = AdamWConfig(lr=1.0, warmup_steps=10, total_steps=110,
+                      min_lr_ratio=0.1)
+    lrs = [float(cosine_schedule(cfg, jnp.int32(s))) for s in
+           (0, 5, 10, 60, 110)]
+    assert lrs[0] == 0.0
+    assert lrs[1] == pytest.approx(0.5)
+    assert lrs[2] == pytest.approx(1.0)
+    assert 0.1 < lrs[3] < 1.0
+    assert lrs[4] == pytest.approx(0.1)
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_documents_deterministic():
+    cfg = DataConfig(vocab_size=1000, seq_len=64, global_batch=4)
+    s1, s2 = SyntheticTextSource(cfg), SyntheticTextSource(cfg)
+    for i in (0, 7, 123):
+        np.testing.assert_array_equal(s1.document(i), s2.document(i))
+
+
+def test_batches_deterministic_and_resumable():
+    cfg = DataConfig(vocab_size=500, seq_len=32, global_batch=4)
+    b1 = list(next(make_train_batches(cfg)) for _ in range(1))[0]
+    it = make_train_batches(cfg)
+    b2 = next(it)
+    for k in b1:
+        np.testing.assert_array_equal(b1[k], b2[k])
+    # resume from next_doc reproduces the following batch
+    nxt = int(b2["next_doc"])
+    b3 = next(it)
+    b3r = next(make_train_batches(cfg, start_doc=nxt))
+    np.testing.assert_array_equal(b3["tokens"], b3r["tokens"])
+
+
+def test_host_sharding_disjoint():
+    cfg = DataConfig(vocab_size=500, seq_len=32, global_batch=8)
+    a = next(make_train_batches(cfg, host=0, num_hosts=2))
+    b = next(make_train_batches(cfg, host=1, num_hosts=2))
+    assert a["tokens"].shape[0] == 4
+    assert not np.array_equal(a["tokens"], b["tokens"])
+
+
+def test_packing_preserves_tokens_and_masks():
+    docs = [np.arange(1, 10), np.arange(100, 140), np.arange(7, 12)]
+    tokens, segs, pos = pack_documents(docs, seq_len=24)
+    # all document tokens appear
+    packed = tokens[segs > 0]
+    all_docs = np.concatenate([d for d in docs])
+    assert sorted(packed.tolist()) == sorted(all_docs.tolist())
+    # positions restart per segment
+    for r in range(tokens.shape[0]):
+        for sid in np.unique(segs[r]):
+            if sid == 0:
+                continue
+            sel = pos[r][segs[r] == sid]
+            np.testing.assert_array_equal(sel, np.arange(len(sel)))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint
+# ---------------------------------------------------------------------------
+
+def _tree():
+    return {"a": jnp.arange(12.0).reshape(3, 4),
+            "b": {"c": jnp.ones(5, jnp.int32)}}
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    t = _tree()
+    save_checkpoint(str(tmp_path), 7, t, {"note": "x"})
+    restored, meta = load_checkpoint(str(tmp_path), t)
+    assert meta["note"] == "x"
+    np.testing.assert_array_equal(restored["a"], t["a"])
+    np.testing.assert_array_equal(restored["b"]["c"], t["b"]["c"])
+
+
+def test_checkpoint_shape_mismatch_raises(tmp_path):
+    save_checkpoint(str(tmp_path), 1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.ones(5, jnp.int32)}}
+    with pytest.raises(ValueError):
+        load_checkpoint(str(tmp_path), bad)
+
+
+def test_manager_async_retention_and_emergency(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2)
+    for s in (10, 20, 30):
+        mgr.save_async(s, _tree(), {"step": s})
+    mgr.wait()
+    assert latest_step(str(tmp_path)) == 30
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(tmp_path))
+    assert len(steps) == 2 and 10 not in steps
+    path = mgr.save_emergency(31, _tree(), {"step": 31})
+    assert os.path.exists(os.path.join(path, "manifest.json"))
+    _, meta = load_checkpoint(str(tmp_path), _tree(), step=31)
+    assert meta["emergency"] is True
+
+
+def test_reshard_tree_roundtrip():
+    t = _tree()
+    shard = jax.tree.map(
+        lambda x: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+    r = reshard_tree(t, shard)
+    np.testing.assert_array_equal(r["a"], t["a"])
+
+
+# ---------------------------------------------------------------------------
+# runtime health
+# ---------------------------------------------------------------------------
+
+def test_heartbeat_detects_dead_host():
+    clock = {"t": 0.0}
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10,
+                           clock=lambda: clock["t"])
+    clock["t"] = 5
+    mon.beat("h0")
+    clock["t"] = 12
+    assert mon.dead_hosts() == ["h1"]
+    mon.beat("h1")               # recovery
+    assert mon.healthy()
+
+
+def test_straggler_detection_persistent_outlier():
+    det = StragglerDetector(window=4, mad_threshold=3.0, persistence=2)
+    for step in range(8):
+        for h in range(6):
+            det.record(f"h{h}", 1.0 + 0.01 * h)
+        det.record("slow", 5.0)
+        out = det.stragglers()
+    assert out == ["slow"]
+
+
+def test_elastic_plan():
+    p = plan_elastic_remesh(512, model_parallel=16, chips_per_pod=256)
+    assert (p.pods, p.data, p.model) == (2, 16, 16)
+    # lose 13 chips from one pod -> drop to one full pod + biggest DP
+    p = plan_elastic_remesh(499, model_parallel=16, chips_per_pod=256)
+    assert p.model == 16 and p.chips <= 499
+    assert p.data >= 8
+    with pytest.raises(ValueError):
+        plan_elastic_remesh(8, model_parallel=16)
+
+
+# ---------------------------------------------------------------------------
+# LaneGrid (MVE dimension-level masking applied to serving)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from(["alloc", "free"]), min_size=1,
+                max_size=60))
+def test_lane_grid_invariants(ops):
+    grid = LaneGrid((16, 8))
+    live = {}
+    for i, op in enumerate(ops):
+        if op == "alloc":
+            slot = grid.allocate(f"p{i}")
+            if slot is not None:
+                assert slot not in live
+                live[slot] = f"p{i}"
+            else:
+                assert len(live) == 8
+        elif live:
+            slot = sorted(live)[0]
+            payload = grid.release(slot)
+            assert payload == live.pop(slot)
+    assert set(grid.active_slots()) == set(live)
+    assert grid.occupancy() == pytest.approx(len(live) / 8)
+    lm = grid.lane_mask()
+    assert lm.sum() == len(live) * 16
+
+
+def test_lane_grid_mask_cr_capacity():
+    with pytest.raises(ValueError):
+        LaneGrid((4, 512))       # top dim exceeds the 256-entry mask CR
+
+
+def test_adamw_int8_state_tracks_fp32():
+    """Block-quantized moments converge close to fp32 Adam."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(0)
+    w_true = jax.random.normal(key, (8, 8))
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, 8))
+    y = x @ w_true
+
+    def loss_fn(p):
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    finals = {}
+    for fmt in ("fp32", "int8"):
+        cfg = AdamWConfig(lr=5e-2, warmup_steps=0, weight_decay=0.0,
+                          total_steps=100, min_lr_ratio=1.0,
+                          state_format=fmt)
+        p = {"w": jnp.zeros((8, 8))}
+        st = adamw_init(p, fmt)
+        for _ in range(60):
+            g = jax.grad(loss_fn)(p)
+            p, st, _ = adamw_update(cfg, p, g, st)
+        finals[fmt] = float(loss_fn(p))
+    assert finals["int8"] < 0.1
+    assert finals["int8"] < finals["fp32"] * 20 + 0.05
+    # and the state really is int8
+    st_leaves = jax.tree.leaves(
+        adamw_init({"w": jnp.zeros((8, 8))}, "int8")["m"])
+    assert any(l.dtype == jnp.int8 for l in st_leaves)
+
+
+def test_checkpoint_roundtrip_int8_opt_state(tmp_path):
+    """The quantized optimizer state (nested {q,s} moments) checkpoints."""
+    p = {"w": jnp.arange(32.0).reshape(4, 8).astype(jnp.bfloat16)}
+    st = adamw_init(p, "int8")
+    cfg = AdamWConfig(lr=1e-2, warmup_steps=0, state_format="int8")
+    g = {"w": jnp.ones((4, 8))}
+    p, st, _ = adamw_update(cfg, p, g, st)
+    save_checkpoint(str(tmp_path), 3, {"params": p, "opt": st})
+    restored, _ = load_checkpoint(str(tmp_path), {"params": p, "opt": st})
+    np.testing.assert_array_equal(
+        np.asarray(restored["opt"]["m"]["w"]["q"]),
+        np.asarray(st["m"]["w"]["q"]))
+    np.testing.assert_allclose(
+        np.asarray(restored["opt"]["m"]["w"]["s"]),
+        np.asarray(st["m"]["w"]["s"]))
+    np.testing.assert_array_equal(
+        np.asarray(restored["params"]["w"], np.float32),
+        np.asarray(p["w"], np.float32))
