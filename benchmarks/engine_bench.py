@@ -1,0 +1,102 @@
+"""Interpreter-vs-compiled-engine wall clock on the full pattern sweep.
+
+Measures the tentpole claim of the engine split (docs/ENGINE.md): the
+whole-program compiled path must beat the per-instruction step interpreter
+by >= 5x on a sweep over every Section-IV pattern.  Also reports compile
+time (amortized once per program shape) and the vmap-batched throughput of
+one pattern evaluated over many input images.
+
+    PYTHONPATH=src python -m benchmarks.engine_bench            # CSV rows
+    PYTHONPATH=src python -m benchmarks.engine_bench --json BENCH_engine.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import List, Tuple
+
+import jax
+import numpy as np
+
+from repro.core import MVEConfig, MVEInterpreter, compile_program
+from repro.core.patterns import PATTERNS, run_pattern_batch
+
+
+def _block(tree):
+    jax.block_until_ready(tree)
+
+
+def engine_vs_interp(iters: int = 3) -> List[Tuple[str, float, str]]:
+    cfg = MVEConfig()
+    oracle = MVEInterpreter(cfg, compiled=False)
+    runs = {name: PATTERNS[name]() for name in sorted(PATTERNS)}
+    rows: List[Tuple[str, float, str]] = []
+
+    # compile (cached per program; first run also warms the jit executable)
+    t0 = time.perf_counter()
+    compiled = {n: compile_program(r.program, cfg) for n, r in runs.items()}
+    for n, r in runs.items():
+        _block(compiled[n].run(r.memory)[0])
+    compile_s = time.perf_counter() - t0
+    rows.append(("engine/compile_sweep", compile_s * 1e6,
+                 f"programs={len(runs)}"))
+
+    interp_total = engine_total = 0.0
+    for name, r in runs.items():
+        t0 = time.perf_counter()
+        mem_i, _ = oracle.run_stepwise(r.program, r.memory)
+        _block(mem_i)
+        t_i = time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            mem_e, _ = compiled[name].run(r.memory)
+        _block(mem_e)
+        t_e = (time.perf_counter() - t0) / iters
+
+        np.testing.assert_array_equal(np.asarray(mem_i), np.asarray(mem_e))
+        interp_total += t_i
+        engine_total += t_e
+        rows.append((f"engine/{name}", t_e * 1e6,
+                     f"interp_us={t_i*1e6:.0f};speedup={t_i/t_e:.1f}x"))
+
+    rows.append(("engine/sweep_total", engine_total * 1e6,
+                 f"interp_us={interp_total*1e6:.0f};"
+                 f"speedup={interp_total/engine_total:.1f}x"))
+
+    # vmap batching: one fused call over a batch of memory images
+    batch = 16
+    name = "daxpy"
+    t0 = time.perf_counter()
+    _, mems = run_pattern_batch(name, seeds=list(range(batch)))
+    _block(mems)
+    t_warm = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    _, mems = run_pattern_batch(name, seeds=list(range(batch)))
+    _block(mems)
+    t_b = time.perf_counter() - t0
+    rows.append((f"engine/vmap_{name}_x{batch}", t_b * 1e6,
+                 f"per_image_us={t_b/batch*1e6:.0f};"
+                 f"first_call_us={t_warm*1e6:.0f}"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None,
+                    help="also write results to this JSON file")
+    args = ap.parse_args()
+    rows = engine_vs_interp()
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.3f},{derived}")
+    if args.json:
+        payload = {name: {"us": us, "derived": derived}
+                   for name, us, derived in rows}
+        with open(args.json, "w") as f:
+            json.dump(payload, f, indent=2)
+
+
+if __name__ == "__main__":
+    main()

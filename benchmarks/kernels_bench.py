@@ -63,4 +63,13 @@ def kernel_microbench() -> List[Tuple[str, float, str]]:
     rows.append(("kernels/flash_attention_pallas", t_fa, "2x4x256x64"))
     rows.append(("kernels/flash_attention_ref", t_fr,
                  f"ratio={t_fa/t_fr:.1f}x"))
+
+    # MVE pattern execution through the compiled engine (docs/ENGINE.md):
+    # one fused jit call replaces the per-instruction interpreter loop.
+    from repro.core import compile_program
+    from repro.core.patterns import PATTERNS
+    run = PATTERNS["transpose"]()
+    cp = compile_program(run.program)
+    t_eng = _time(lambda m: cp.run(m)[0], run.memory)
+    rows.append(("kernels/mve_transpose_engine", t_eng, "512x49;fused-jit"))
     return rows

@@ -13,10 +13,10 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import MVEConfig, MVEInterpreter, cost, rvv
+from repro.core import MVEConfig, cost, rvv
 from repro.core.cost import GPUModel, NeonModel, TimingParams
 from repro.core.isa import DType, Op
-from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET
+from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET, run_pattern
 
 # --- energy constants (pJ) --------------------------------------------------
 # In-SRAM computing: energy per array per active cycle (two wordline
@@ -41,8 +41,9 @@ FREQ = 2.8  # GHz
 def _mve_run(name: str, cfg: MVEConfig | None = None, **kw):
     cfg = cfg or MVEConfig()
     run = PATTERNS[name](**kw)
-    interp = MVEInterpreter(cfg)
-    mem_after, state = interp.run(run.program, run.memory)
+    # compiled-engine path (cached per program; bit-identical to the
+    # step interpreter — tests/test_engine.py)
+    mem_after, state = run_pattern(run, cfg, compiled=True)
     run.check(np.asarray(mem_after), state)      # every bench re-validates
     tl = cost.simulate(state.trace, cfg)
     return run, state, tl

@@ -12,11 +12,13 @@ import sys
 import traceback
 
 from . import paper_claims
+from .engine_bench import engine_vs_interp
 from .kernels_bench import kernel_microbench
 from .roofline import roofline_rows
 from .serving_bench import serving_throughput
 
 SECTIONS = {
+    "engine": engine_vs_interp,
     "table2": paper_claims.table2_latencies,
     "fig7": paper_claims.fig7_neon,
     "fig8": paper_claims.fig8_gpu,

@@ -1,32 +1,33 @@
 """Section IV's data-parallel patterns, executed and priced.
 
-Runs every Swan-library pattern through the MVE interpreter (validating
-numerics), prices it on the bit-serial engine vs the 1-D RVV lowering,
-and shows the same multi-dim access executed by the Pallas TPU kernels
-(gather + scatter = the transpose pattern).
+Runs every Swan-library pattern through the compiled MVE engine
+(docs/ENGINE.md; one fused jit call per pattern, validating numerics),
+prices it on the bit-serial engine vs the 1-D RVV lowering, and shows the
+same multi-dim access executed by the Pallas TPU kernels (gather +
+scatter = the transpose pattern).
 
     PYTHONPATH=src python examples/mve_patterns.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MVEInterpreter, cost, rvv
-from repro.core.patterns import PATTERNS
+from repro.core import MVEConfig, cost, rvv
+from repro.core.patterns import PATTERNS, run_pattern
 from repro.kernels.mdgather import mdgather
 from repro.kernels.mdscatter import mdscatter
 
 
 def main():
-    interp = MVEInterpreter()
+    cfg = MVEConfig()
     print(f"{'pattern':14s} {'library':12s} {'dim':4s} "
           f"{'mve_us':>8s} {'rvv_us':>8s} {'speedup':>8s}")
     for name in sorted(PATTERNS):
         run = PATTERNS[name]()
-        mem_after, state = interp.run(run.program, run.memory)
+        mem_after, state = run_pattern(run, cfg)     # compiled engine
         run.check(np.asarray(mem_after), state)      # always validate
-        tl = cost.simulate(state.trace, interp.cfg)
+        tl = cost.simulate(state.trace, cfg)
         trace_rvv, _ = rvv.compile_to_rvv(run.program)
-        tl_rvv = cost.simulate(trace_rvv, interp.cfg)
+        tl_rvv = cost.simulate(trace_rvv, cfg)
         print(f"{name:14s} {run.library:12s} {run.dim:4s} "
               f"{tl.us(2.8):8.2f} {tl_rvv.us(2.8):8.2f} "
               f"{tl_rvv.total_cycles / tl.total_cycles:7.2f}x")

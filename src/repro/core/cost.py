@@ -31,8 +31,43 @@ import numpy as np
 
 from .isa import (ARITH_OPS, COMPARE_OPS, CONFIG_OPS, MEMORY_OPS, MOVE_OPS,
                   DType, Op)
-from .interp import TraceEvent
 from .machine import MVEConfig
+
+
+@dataclasses.dataclass
+class TraceEvent:
+    """One executed instruction with everything the cost model needs.
+
+    Trace events are *data-independent* for strided accesses (addresses are
+    fully determined by the control registers), which is what lets the
+    compiled engine (:mod:`repro.core.engine`, docs/ENGINE.md) emit them at
+    compile time.  Random-base accesses (Eq. 1) additionally depend on the
+    pointer array contents, so their exact ``lines`` count is filled in
+    after execution.
+    """
+
+    op: Op
+    dtype: "DType | None"
+    elements: int              # active elements (post dimension mask)
+    cb_mask: np.ndarray        # which CBs participate
+    segments: int = 1          # distinct contiguous runs in memory
+    scalar_count: int = 0
+    contiguous_run: int = 1    # elements per contiguous run
+    unique_elements: int = 1   # memory words actually touched (stride-0
+                               # replication is free through the crossbar)
+    lines: int = 1             # exact 64B cache lines touched
+
+    def same_as(self, other: "TraceEvent") -> bool:
+        """Field-by-field equality (``cb_mask`` is an array, so the
+        generated dataclass ``__eq__`` would be ambiguous)."""
+        return (self.op is other.op and self.dtype is other.dtype
+                and self.elements == other.elements
+                and self.segments == other.segments
+                and self.scalar_count == other.scalar_count
+                and self.contiguous_run == other.contiguous_run
+                and self.unique_elements == other.unique_elements
+                and self.lines == other.lines
+                and bool(np.array_equal(self.cb_mask, other.cb_mask)))
 
 
 # ---------------------------------------------------------------------------

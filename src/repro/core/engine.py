@@ -1,0 +1,387 @@
+"""Compiled MVE execution engine: whole-program compile + fused execution.
+
+The step interpreter (:class:`repro.core.interp.MVEInterpreter`) walks a
+program one instruction at a time, paying Python dispatch and host/device
+round trips on every step.  This module exploits a structural property of
+the ISA: *all* addressing state lives in control registers written by
+config instructions with immediate operands, so a single symbolic pass over
+the program can resolve every per-instruction address vector, lane mask,
+CB mask and :class:`~repro.core.cost.TraceEvent` ahead of time.  What
+remains — the data path — is emitted as one fused ``jax.jit`` function for
+the whole program, with ``jax.vmap`` support for evaluating the same
+program over a batch of memory images.
+
+Static vs dynamic split (design note: docs/ENGINE.md):
+
+  static  — control-register evolution, per-lane addresses of strided
+            accesses, dimension/lane/CB masks, trace metadata;
+  dynamic — register values, the Tag predicate latch, memory contents,
+            and the addresses of random-base accesses (Eq. 1), whose
+            pointer arrays are fetched from memory at run time.
+
+Random-base accesses are the one place the trace is data-dependent: their
+exact cache-line count depends on the pointer values, so the jitted
+function also returns those address vectors and :meth:`CompiledProgram.run`
+fills the ``lines`` field after execution.  Everything else about the
+trace is emitted at compile time.
+
+Bit-exactness.  The engine must reproduce the step interpreter bit for bit,
+but XLA:CPU selects instructions with FP-contraction enabled: any ``fmul``
+directly feeding an ``fadd`` in one fused loop becomes an FMA, skipping the
+intermediate rounding that per-instruction eager execution performs.  The
+fix is architectural rather than a compiler flag (none exists): every
+register write-back is guarded by its instruction's *own* dimension-mask
+vector, streamed in as run-time data (one row per instruction).  LLVM
+cannot prove two mask rows equal, so the selects survive optimization and
+no multiply result ever reaches an add without an intervening rounding
+point — exactly the semantics of distinct in-cache instructions.
+
+The interpreter remains the semantic oracle: ``tests/test_engine.py``
+asserts bit-identical memory results and identical trace events on every
+registered pattern.
+"""
+from __future__ import annotations
+
+import copy
+import dataclasses
+from collections import OrderedDict
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import isa
+from .isa import DType, Instr, Op
+from .cost import TraceEvent
+from .machine import (JNP_DTYPE, ControlState, MVEConfig, apply_config,
+                      cbs_touched, flatten_indices, lane_dim_mask,
+                      stream_shape, touched_lines)
+
+
+@dataclasses.dataclass
+class _Step:
+    """One vector/scalar instruction with its statically resolved context."""
+
+    instr: Instr
+    lane_mask: Optional[np.ndarray] = None   # per-lane dimension mask
+    cb_mask: Optional[np.ndarray] = None
+    event: Optional[TraceEvent] = None
+    mask_slot: Optional[int] = None          # row in the runtime mask stack
+    addr: Optional[np.ndarray] = None        # static element addresses
+    # random-base (Eq. 1) accesses: pointer slice + static inner offsets
+    ptr_base: Optional[int] = None
+    top_len: Optional[int] = None
+    top_idx: Optional[np.ndarray] = None
+    offsets: Optional[np.ndarray] = None
+    rand_slot: Optional[int] = None          # index into returned addresses
+
+
+@dataclasses.dataclass
+class ExecutionResult:
+    """Duck-type compatible with :class:`repro.core.interp.MachineState`."""
+
+    memory: jnp.ndarray
+    regs: Dict[int, jnp.ndarray]
+    tag: jnp.ndarray
+    ctrl: ControlState
+    trace: List[TraceEvent]
+
+
+class CompiledProgram:
+    """An MVE program lowered to one fused JAX function + a static trace.
+
+    Use :func:`compile_program` (cached) rather than constructing directly.
+    The compiled object is memory-image independent: it executes any image
+    of a given size (or a vmapped batch of them) without re-tracing.
+    """
+
+    def __init__(self, program: isa.Program, cfg: MVEConfig):
+        self.cfg = cfg
+        self.program = tuple(program)
+        self.steps: List[_Step] = []
+        self.n_random = 0
+        self._compile_walk()
+        masks = [s.lane_mask for s in self.steps if s.mask_slot is not None]
+        self._masks = jnp.asarray(np.stack(masks)) if masks else \
+            jnp.zeros((0, cfg.lanes), dtype=bool)
+        self._zeros = jnp.zeros(cfg.lanes, dtype=jnp.float32)
+        self._jit = jax.jit(self._execute)
+        self._batch_jit = None
+
+    # -- compilation -------------------------------------------------------
+    def _compile_walk(self) -> None:
+        """Symbolically execute config ops; resolve every access statically."""
+        cfg = self.cfg
+        ctrl = ControlState()
+        n_masked = 0
+        for instr in self.program:
+            op = instr.op
+            if op in isa.CONFIG_OPS:
+                apply_config(ctrl, instr)
+                self.steps.append(_Step(instr, event=TraceEvent(
+                    op=op, dtype=None, elements=0,
+                    cb_mask=np.zeros(cfg.num_cbs, dtype=bool))))
+                continue
+            if op is Op.SCALAR:
+                self.steps.append(_Step(instr, event=TraceEvent(
+                    op=op, dtype=None, elements=0,
+                    cb_mask=np.zeros(cfg.num_cbs, dtype=bool),
+                    scalar_count=instr.scalar_count)))
+                continue
+
+            dims = ctrl.active_dims()
+            lane_mask = lane_dim_mask(dims, ctrl.dim_mask, cfg.lanes)
+            cbm = cbs_touched(dims, ctrl.dim_mask, cfg)
+            elements = int(lane_mask.sum())
+            step = _Step(instr, lane_mask=lane_mask, cb_mask=cbm,
+                         mask_slot=n_masked)
+            n_masked += 1
+
+            if op in isa.MEMORY_OPS:
+                store = op in (Op.SST, Op.RST)
+                random = op in (Op.RLD, Op.RST)
+                strides = ctrl.resolve_strides(instr.modes or (), store)
+                run, segs, uniq = stream_shape(dims, strides, cfg.lanes)
+                coords = flatten_indices(dims, cfg.lanes)
+                if random:
+                    top_len = dims[-1]
+                    offsets = np.zeros(cfg.lanes, dtype=np.int64)
+                    for d in range(len(dims) - 1):
+                        offsets += np.where(coords[:, d] >= 0,
+                                            coords[:, d], 0) * strides[d]
+                    step.ptr_base = instr.base
+                    step.top_len = top_len
+                    step.top_idx = np.clip(coords[:, len(dims) - 1],
+                                           0, top_len - 1)
+                    step.offsets = offsets
+                    step.rand_slot = self.n_random
+                    self.n_random += 1
+                    lines = 0          # filled from run-time addresses
+                else:
+                    addr = np.full(cfg.lanes, instr.base, dtype=np.int64)
+                    for d in range(len(dims)):
+                        addr += np.where(coords[:, d] >= 0,
+                                         coords[:, d], 0) * strides[d]
+                    step.addr = addr
+                    lines = touched_lines(addr, lane_mask,
+                                          instr.dtype.nbytes)
+                step.event = TraceEvent(op, instr.dtype, elements, cbm,
+                                        segments=segs, contiguous_run=run,
+                                        unique_elements=uniq, lines=lines)
+            else:
+                step.event = TraceEvent(op, instr.dtype, elements, cbm)
+            self.steps.append(step)
+        self.final_ctrl = copy.deepcopy(ctrl)
+
+    # -- fused data path ---------------------------------------------------
+    def _execute(self, memory, masks, zeros):
+        """The whole program as one traced JAX computation.
+
+        Mirrors :meth:`MVEInterpreter._step` semantics exactly (the
+        equivalence tests depend on it) with all addressing constant-folded.
+        ``masks`` carries one dimension-mask row per vector instruction and
+        ``zeros`` the power-on register value; both arrive as run-time data
+        so each write-back keeps its own rounding point (see the module
+        docstring on FP contraction).
+        """
+        cfg = self.cfg
+        regs: Dict[int, jnp.ndarray] = {}
+        tag = jnp.ones(cfg.lanes, dtype=bool)
+        rand_addrs: List[jnp.ndarray] = [None] * self.n_random
+        hi = memory.shape[0] - 1
+
+        for step in self.steps:
+            instr = step.instr
+            op = instr.op
+            if op in isa.CONFIG_OPS or op is Op.SCALAR:
+                continue
+
+            dt = JNP_DTYPE.get(instr.dtype, jnp.float32)
+            jmask = masks[step.mask_slot]
+
+            def old(vd, dt=dt):
+                v = regs.get(vd)
+                return (zeros if v is None else v).astype(dt)
+
+            if op in (Op.SLD, Op.RLD):
+                addr = self._address_vector(step, memory)
+                if step.rand_slot is not None:
+                    rand_addrs[step.rand_slot] = addr
+                gathered = memory[jnp.clip(addr, 0, hi)].astype(dt)
+                regs[instr.vd] = jnp.where(jmask, gathered, old(instr.vd))
+                continue
+            if op in (Op.SST, Op.RST):
+                addr = self._address_vector(step, memory)
+                if step.rand_slot is not None:
+                    rand_addrs[step.rand_slot] = addr
+                src = old(instr.vs1)
+                # Drop masked lanes; later lanes win on address collisions
+                # (well-defined scatter order, matches a sequential loop).
+                idx = jnp.where(jmask, addr, -1)
+                valid = idx >= 0
+                safe_idx = jnp.where(valid, idx, 0)
+                mem_dt = memory.dtype
+                update = jnp.where(valid, src.astype(mem_dt),
+                                   memory[safe_idx])
+                memory = memory.at[safe_idx].set(update)
+                continue
+
+            def finish(result, instr=instr, jmask=jmask, dt=dt, old=old):
+                result = result.astype(dt)
+                keep = jmask
+                if instr.predicated:
+                    keep = keep & tag
+                regs[instr.vd] = jnp.where(keep, result, old(instr.vd))
+
+            if op is Op.SET_DUP:
+                finish(jnp.full(cfg.lanes, instr.imm, dtype=dt))
+                continue
+            if op is Op.CPY:
+                finish(old(instr.vs1))
+                continue
+            if op is Op.CVT:
+                v = regs.get(instr.vs1)
+                src = zeros if v is None else v
+                finish(src.astype(dt))
+                continue
+
+            a = old(instr.vs1)
+            b = old(instr.vs2) if instr.vs2 is not None else None
+
+            if op is Op.ADD:
+                finish(a + b)
+            elif op is Op.SUB:
+                finish(a - b)
+            elif op is Op.MUL:
+                finish(a * b)
+            elif op is Op.MIN:
+                finish(jnp.minimum(a, b))
+            elif op is Op.MAX:
+                finish(jnp.maximum(a, b))
+            elif op is Op.XOR:
+                finish(a ^ b)
+            elif op is Op.AND:
+                finish(a & b)
+            elif op is Op.OR:
+                finish(a | b)
+            elif op is Op.SHI:
+                if instr.dtype.is_float:
+                    raise ValueError("shift on float register")
+                amt = instr.imm
+                finish(a << amt if amt >= 0 else a >> (-amt))
+            elif op is Op.ROTI:
+                bits = instr.dtype.bits
+                amt = instr.imm % bits
+                ua = a.astype(jnp.uint32 if bits <= 32 else jnp.uint64)
+                finish(((ua << amt) | (ua >> (bits - amt))).astype(dt))
+            elif op is Op.SHR:
+                finish(a << b.astype(jnp.int32))
+            elif op in isa.COMPARE_OPS:
+                cmp = {Op.GT: a > b, Op.GTE: a >= b, Op.LT: a < b,
+                       Op.LTE: a <= b, Op.EQ: a == b, Op.NEQ: a != b}[op]
+                tag = jnp.where(jmask, cmp, tag)
+            else:
+                raise NotImplementedError(f"op {op}")
+
+        return memory, regs, tag, rand_addrs
+
+    @staticmethod
+    def _address_vector(step: _Step, memory):
+        """Element addresses: constant for strided, traced for random-base
+        (the pointer array is part of the data, Eq. 1)."""
+        if step.addr is not None:
+            return jnp.asarray(step.addr)
+        ptrs = memory[step.ptr_base: step.ptr_base + step.top_len]
+        ptrs = ptrs.astype(jnp.int32)
+        return ptrs[step.top_idx] + jnp.asarray(step.offsets)
+
+    # -- public API --------------------------------------------------------
+    def run(self, memory) -> Tuple[jnp.ndarray, ExecutionResult]:
+        """Execute on one memory image; returns ``(memory, state)`` exactly
+        like :meth:`MVEInterpreter.run` (trace included)."""
+        mem, regs, tag, rand_addrs = self._jit(
+            jnp.asarray(memory), self._masks, self._zeros)
+        trace = self._finalize_trace(rand_addrs)
+        # Fresh ctrl/trace objects per run: callers may mutate the returned
+        # state (the stepwise oracle hands out fresh state too), and this
+        # CompiledProgram is shared through the compile cache.
+        state = ExecutionResult(memory=mem, regs=dict(regs), tag=tag,
+                                ctrl=copy.deepcopy(self.final_ctrl),
+                                trace=trace)
+        return mem, state
+
+    def run_batch(self, memories) -> Tuple[jnp.ndarray,
+                                           Dict[int, jnp.ndarray],
+                                           jnp.ndarray]:
+        """vmap the fused program over a leading batch of memory images.
+
+        Returns ``(memories, regs, tag)`` with a leading batch axis on
+        every array.  No trace is produced: the cost-model trace of a
+        batched run is that of any single element (and for random-base
+        programs each element may touch different cache lines — use
+        :meth:`run` on a representative image to price it).
+        """
+        if self._batch_jit is None:
+            self._batch_jit = jax.jit(
+                jax.vmap(self._execute, in_axes=(0, None, None)))
+        mem, regs, tag, _ = self._batch_jit(
+            jnp.asarray(memories), self._masks, self._zeros)
+        return mem, dict(regs), tag
+
+    def _finalize_trace(self, rand_addrs) -> List[TraceEvent]:
+        trace: List[TraceEvent] = []
+        for step in self.steps:
+            ev = step.event
+            if step.rand_slot is not None:
+                addr = np.asarray(rand_addrs[step.rand_slot],
+                                  dtype=np.int64)
+                ev = dataclasses.replace(ev, lines=touched_lines(
+                    addr, step.lane_mask, step.instr.dtype.nbytes))
+            else:
+                ev = dataclasses.replace(ev)
+            trace.append(ev)
+        return trace
+
+    @property
+    def static_trace(self) -> List[TraceEvent]:
+        """The compile-time trace; exact unless the program uses
+        random-base accesses (then run() fills the ``lines`` fields)."""
+        return [s.event for s in self.steps]
+
+
+# ---------------------------------------------------------------------------
+# Compile cache: programs are tuples of frozen Instr, so they hash.  Bounded
+# LRU — data-dependent program streams (e.g. one program per sparsity
+# pattern) would otherwise retain a jitted executable per variant forever.
+# ---------------------------------------------------------------------------
+
+_CACHE: "OrderedDict[Tuple[Tuple[Instr, ...], MVEConfig], CompiledProgram]" \
+    = OrderedDict()
+_CACHE_CAPACITY = 256
+
+
+def compile_program(program: isa.Program,
+                    cfg: MVEConfig | None = None) -> CompiledProgram:
+    """Compile (with caching) an MVE program for the given machine config.
+
+    The returned :class:`CompiledProgram` is memory-image independent: the
+    same object executes any number of images (or a vmapped batch) without
+    re-tracing, and repeated calls with an equal program return the cached
+    compilation.
+    """
+    cfg = cfg or MVEConfig()
+    key = (tuple(program), cfg)
+    cp = _CACHE.get(key)
+    if cp is None:
+        cp = _CACHE[key] = CompiledProgram(program, cfg)
+        while len(_CACHE) > _CACHE_CAPACITY:
+            _CACHE.popitem(last=False)
+    else:
+        _CACHE.move_to_end(key)
+    return cp
+
+
+def clear_cache() -> None:
+    """Drop all cached compilations (tests / memory pressure)."""
+    _CACHE.clear()

@@ -4,12 +4,20 @@ This is the *semantic oracle* for the ISA: registers are JAX arrays of shape
 ``(lanes,)``; memory is a flat JAX array addressed in elements.  Multi-dim
 strided loads implement Algorithm 1, random loads implement Equation 1, and
 dimension-level masking follows Section III-E (masked lanes retain their old
-destination value; masked stores are dropped).
+destination value; masked stores are dropped).  The ISA semantics are
+documented with worked examples in docs/ISA.md.
 
 The interpreter also produces an execution *trace* consumed by the cost
 models in :mod:`repro.core.cost` — this mirrors the paper's methodology of
 a trace-driven cycle-accurate simulator fed by a functional intrinsic
 library (Section VI).
+
+Execution is routed through the compiled engine by default
+(:mod:`repro.core.engine`, design note in docs/ENGINE.md): a whole-program
+compile pass resolves all addressing statically and runs the data path as
+one fused ``jax.jit`` function.  The per-instruction step loop is kept as
+:meth:`MVEInterpreter.run_stepwise` — it is the independent cross-check
+oracle the engine is equivalence-tested against (``tests/test_engine.py``).
 """
 from __future__ import annotations
 
@@ -21,43 +29,10 @@ import numpy as np
 
 from . import isa
 from .isa import DType, Instr, Op
-from .machine import (ControlState, MVEConfig, cbs_touched, flatten_indices,
-                      lane_dim_mask)
-
-# Byte data in the mobile kernels (pixels, characters) is unsigned; wider
-# integer types model the signed variants (the ISA has both, Section III-F).
-_JNP_DTYPE = {
-    DType.B: jnp.uint8,
-    DType.W: jnp.int16,
-    DType.DW: jnp.int32,
-    DType.QW: jnp.int64,
-    DType.HF: jnp.float16,
-    DType.F: jnp.float32,
-}
-
-
-@dataclasses.dataclass
-class TraceEvent:
-    """One executed instruction with everything the cost model needs."""
-
-    op: Op
-    dtype: Optional[DType]
-    elements: int              # active elements (post dimension mask)
-    cb_mask: np.ndarray        # which CBs participate
-    segments: int = 1          # distinct contiguous runs in memory
-    scalar_count: int = 0
-    contiguous_run: int = 1    # elements per contiguous run
-    unique_elements: int = 1   # memory words actually touched (stride-0
-                               # replication is free through the crossbar)
-    lines: int = 1             # exact 64B cache lines touched
-
-
-def _touched_lines(addr: np.ndarray, mask: np.ndarray,
-                   nbytes: int) -> int:
-    """Exact 64-byte cache lines covered by a masked address stream."""
-    if not mask.any():
-        return 0
-    return int(np.unique((addr[mask] * nbytes) // 64).size)
+from .cost import TraceEvent  # noqa: F401  (re-exported; historical home)
+from .machine import (JNP_DTYPE, ControlState, MVEConfig, apply_config,
+                      cbs_touched, flatten_indices, lane_dim_mask,
+                      stream_shape, touched_lines)
 
 
 @dataclasses.dataclass
@@ -70,14 +45,29 @@ class MachineState:
 
 
 class MVEInterpreter:
-    """Executes an MVE program on a software model of the in-cache engine."""
+    """Executes an MVE program on a software model of the in-cache engine.
 
-    def __init__(self, config: MVEConfig | None = None):
+    ``compiled=True`` (default) routes :meth:`run` through
+    :func:`repro.core.engine.compile_program`; ``compiled=False`` (or
+    :meth:`run_stepwise`) uses the original per-instruction loop.
+    """
+
+    def __init__(self, config: MVEConfig | None = None,
+                 compiled: bool = True):
         self.cfg = config or MVEConfig()
+        self.compiled = compiled
 
     # -- public API --------------------------------------------------------
     def run(self, program: isa.Program, memory: jnp.ndarray,
             ) -> Tuple[jnp.ndarray, MachineState]:
+        if self.compiled:
+            from .engine import compile_program
+            return compile_program(program, self.cfg).run(memory)
+        return self.run_stepwise(program, memory)
+
+    def run_stepwise(self, program: isa.Program, memory: jnp.ndarray,
+                     ) -> Tuple[jnp.ndarray, MachineState]:
+        """The original one-instruction-at-a-time oracle loop."""
         state = MachineState(
             memory=jnp.asarray(memory),
             regs={},
@@ -121,19 +111,8 @@ class MVEInterpreter:
                 addr = addr + np.where(coords[:, d] >= 0,
                                        coords[:, d], 0) * strides[d]
 
-        # Trace metadata (cost model): stride-0 dims are replication (free
-        # through the TMU crossbar); among the rest, runs grow while each
-        # stride equals the current dense run size (mode-2 "derived"
-        # accesses collapse to a single contiguous run).
-        nz = sorted((s, ln) for ln, s in zip(dims, strides) if s != 0)
-        run, segments, unique = 1, 1, 1
-        for s, ln in nz:
-            unique *= ln
-            if s == run:
-                run *= ln
-            else:
-                segments *= ln
-        return addr, mask, run, segments, min(unique, self.cfg.lanes)
+        run, segments, unique = stream_shape(dims, strides, self.cfg.lanes)
+        return addr, mask, run, segments, unique
 
     def _step(self, instr: Instr, state: MachineState) -> None:
         op = instr.op
@@ -141,29 +120,8 @@ class MVEInterpreter:
         ctrl = state.ctrl
 
         # ---- config ------------------------------------------------------
-        if op is Op.SET_DIMC:
-            ctrl.dim_count = instr.imm
-            return self._trace_config(instr, state)
-        if op is Op.SET_DIML:
-            # The mask CR only covers the first MAX_TOP_DIM elements of the
-            # highest dimension (Section III-E); longer highest dims are
-            # legal but can only be dimension-masked on that prefix.
-            ctrl.dim_lens[instr.dim] = instr.length
-            return self._trace_config(instr, state)
-        if op is Op.SET_LDSTR:
-            ctrl.ld_strides[instr.dim] = instr.stride
-            return self._trace_config(instr, state)
-        if op is Op.SET_STSTR:
-            ctrl.st_strides[instr.dim] = instr.stride
-            return self._trace_config(instr, state)
-        if op is Op.SET_MASK:
-            ctrl.dim_mask[instr.mask_index] = True
-            return self._trace_config(instr, state)
-        if op is Op.UNSET_MASK:
-            ctrl.dim_mask[instr.mask_index] = False
-            return self._trace_config(instr, state)
-        if op is Op.SET_WIDTH:
-            ctrl.kernel_width = instr.imm
+        if op in isa.CONFIG_OPS:
+            apply_config(ctrl, instr)
             return self._trace_config(instr, state)
         if op is Op.SCALAR:
             state.trace.append(TraceEvent(
@@ -177,7 +135,7 @@ class MVEInterpreter:
         jmask = jnp.asarray(mask)
         cbm = cbs_touched(dims, ctrl.dim_mask, cfg)
         elements = int(mask.sum())
-        dt = _JNP_DTYPE.get(instr.dtype, jnp.float32)
+        dt = JNP_DTYPE.get(instr.dtype, jnp.float32)
 
         def old(vd):
             return state.regs.get(
@@ -188,7 +146,7 @@ class MVEInterpreter:
             addr, amask, run, segs, uniq = self._addresses(
                 state, instr.modes or (), instr.base,
                 store=False, random_base=(op is Op.RLD))
-            lines = _touched_lines(addr, amask, instr.dtype.nbytes)
+            lines = touched_lines(addr, amask, instr.dtype.nbytes)
             gathered = state.memory[jnp.asarray(
                 np.clip(addr, 0, state.memory.shape[0] - 1))].astype(dt)
             state.regs[instr.vd] = jnp.where(jnp.asarray(amask), gathered,
@@ -203,7 +161,7 @@ class MVEInterpreter:
             addr, amask, run, segs, uniq = self._addresses(
                 state, instr.modes or (), instr.base,
                 store=True, random_base=(op is Op.RST))
-            lines = _touched_lines(addr, amask, instr.dtype.nbytes)
+            lines = touched_lines(addr, amask, instr.dtype.nbytes)
             src = old(instr.vs1)
             # Drop masked lanes; later lanes win on address collisions
             # (well-defined scatter order, matches a sequential loop).

@@ -19,6 +19,10 @@ Stride encoding uses the paper's 2-bit *stride mode* per dimension:
   mode 1 -> stride 1   (sequential)
   mode 2 -> derived    S_i = S_{i-1} * Dim_{i-1}.Length   (S_{-1} = 1)
   mode 3 -> value taken from the per-dimension stride control register
+
+Full reference with worked examples: docs/ISA.md.  Executable semantics:
+:mod:`repro.core.interp` (step oracle) and :mod:`repro.core.engine`
+(compiled path, docs/ENGINE.md).
 """
 from __future__ import annotations
 

@@ -13,6 +13,9 @@ masked off per-instruction by the dimension-level mask (Section V-B).
 A physical register (PR) occupies ``width`` wordlines out of 256, so the
 number of live PRs is ``wordlines // width`` (Section III-B: constant vector
 length, *variable* register count).
+
+The addressing semantics (stride modes, dimension flattening, masking) are
+documented with worked examples in docs/ISA.md.
 """
 from __future__ import annotations
 
@@ -20,9 +23,21 @@ import dataclasses
 import math
 from typing import List, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
-from .isa import MAX_DIMS, MAX_TOP_DIM
+from .isa import MAX_DIMS, MAX_TOP_DIM, DType, Instr, Op
+
+# Byte data in the mobile kernels (pixels, characters) is unsigned; wider
+# integer types model the signed variants (the ISA has both, Section III-F).
+JNP_DTYPE = {
+    DType.B: jnp.uint8,
+    DType.W: jnp.int16,
+    DType.DW: jnp.int32,
+    DType.QW: jnp.int64,
+    DType.HF: jnp.float16,
+    DType.F: jnp.float32,
+}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -149,6 +164,62 @@ def lane_dim_mask(dims: Tuple[int, ...], dim_mask: np.ndarray,
     active = top >= 0
     top_clipped = np.clip(top, 0, len(dim_mask) - 1)
     return active & dim_mask[top_clipped]
+
+
+def apply_config(ctrl: ControlState, instr: Instr) -> None:
+    """Apply one config instruction to the control registers.
+
+    Shared by the step interpreter, the program compiler
+    (:mod:`repro.core.engine`), and the RVV lowering — the config ops are
+    what both execution paths resolve *statically* (docs/ENGINE.md).
+    """
+    op = instr.op
+    if op is Op.SET_DIMC:
+        ctrl.dim_count = instr.imm
+    elif op is Op.SET_DIML:
+        # The mask CR only covers the first MAX_TOP_DIM elements of the
+        # highest dimension (Section III-E); longer highest dims are
+        # legal but can only be dimension-masked on that prefix.
+        ctrl.dim_lens[instr.dim] = instr.length
+    elif op is Op.SET_LDSTR:
+        ctrl.ld_strides[instr.dim] = instr.stride
+    elif op is Op.SET_STSTR:
+        ctrl.st_strides[instr.dim] = instr.stride
+    elif op is Op.SET_MASK:
+        ctrl.dim_mask[instr.mask_index] = True
+    elif op is Op.UNSET_MASK:
+        ctrl.dim_mask[instr.mask_index] = False
+    elif op is Op.SET_WIDTH:
+        ctrl.kernel_width = instr.imm
+    else:
+        raise ValueError(f"not a config op: {op}")
+
+
+def stream_shape(dims: Tuple[int, ...], strides: Tuple[int, ...],
+                 lanes: int) -> Tuple[int, int, int]:
+    """(contiguous run, segments, unique elements) of a strided access.
+
+    Cost-model metadata: stride-0 dims are replication (free through the
+    TMU crossbar); among the rest, runs grow while each stride equals the
+    current dense run size (mode-2 "derived" accesses collapse to a single
+    contiguous run).
+    """
+    nz = sorted((s, ln) for ln, s in zip(dims, strides) if s != 0)
+    run, segments, unique = 1, 1, 1
+    for s, ln in nz:
+        unique *= ln
+        if s == run:
+            run *= ln
+        else:
+            segments *= ln
+    return run, segments, min(unique, lanes)
+
+
+def touched_lines(addr: np.ndarray, mask: np.ndarray, nbytes: int) -> int:
+    """Exact 64-byte cache lines covered by a masked address stream."""
+    if not mask.any():
+        return 0
+    return int(np.unique((addr[mask] * nbytes) // 64).size)
 
 
 def cbs_touched(dims: Tuple[int, ...], dim_mask: np.ndarray,

@@ -16,7 +16,7 @@ program with :func:`repro.core.rvv.compile_to_rvv`.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -687,3 +687,75 @@ PATTERNS: Dict[str, Callable[..., PatternRun]] = {
 RVV_COMPARISON_SET = ["daxpy", "reduction", "fir", "xor_cipher", "png_up",
                       "alpha_blend", "gemm", "transpose", "audio_mix",
                       "intra_pred", "upsample"]
+
+
+# ---------------------------------------------------------------------------
+# Execution entry points (compiled engine by default; docs/ENGINE.md)
+# ---------------------------------------------------------------------------
+
+def run_pattern(run: PatternRun, cfg: MVEConfig | None = None,
+                compiled: bool = True):
+    """Execute one pattern; returns ``(mem_after, state)``.
+
+    ``compiled=True`` goes through :func:`repro.core.engine.compile_program`
+    (cached, fused jit); ``compiled=False`` uses the step-interpreter
+    oracle.  Both return interchangeable state objects carrying the
+    cost-model trace.
+    """
+    cfg = cfg or MVEConfig()
+    if compiled:
+        from .engine import compile_program
+        return compile_program(run.program, cfg).run(run.memory)
+    from .interp import MVEInterpreter
+    return MVEInterpreter(cfg, compiled=False).run_stepwise(
+        run.program, run.memory)
+
+
+def sweep(names: Optional[Sequence[str]] = None,
+          cfg: MVEConfig | None = None, compiled: bool = True,
+          validate: bool = True) -> Dict[str, Tuple[PatternRun, object]]:
+    """Run every named pattern (default: all) and return name -> (run,
+    state).  This is the fast path for full-library sweeps: with the
+    compiled engine each pattern compiles once and replays from cache."""
+    out: Dict[str, Tuple[PatternRun, object]] = {}
+    for name in (names if names is not None else sorted(PATTERNS)):
+        run = PATTERNS[name]()
+        mem_after, state = run_pattern(run, cfg, compiled=compiled)
+        if validate:
+            run.check(np.asarray(mem_after), state)
+        out[name] = (run, state)
+    return out
+
+
+def run_pattern_batch(name: str, seeds: Sequence[int],
+                      cfg: MVEConfig | None = None, **kw):
+    """Evaluate one pattern across many input images in a single vmapped
+    call.
+
+    Builds the pattern for each seed; when every seed produces the same
+    program (true for the purely strided kernels — the program depends
+    only on sizes), the memory images are stacked and executed by one
+    ``jax.vmap``-batched fused function.  Data-dependent programs (e.g.
+    ``spmm``, whose instruction stream follows the sparsity pattern) fall
+    back to per-image compiled runs.
+
+    Returns ``(runs, mem_after)`` where ``mem_after`` has a leading seed
+    axis aligned with ``runs`` (a list of per-seed arrays when the
+    fallback produces ragged memory sizes).
+    """
+    cfg = cfg or MVEConfig()
+    from .engine import compile_program
+    runs = [PATTERNS[name](seed=s, **kw) for s in seeds]
+    same_prog = all(r.program == runs[0].program for r in runs[1:])
+    same_size = all(r.memory.shape == runs[0].memory.shape
+                    for r in runs[1:])
+    if same_prog and same_size:
+        cp = compile_program(runs[0].program, cfg)
+        mems = np.stack([r.memory for r in runs])
+        mem_after, _, _ = cp.run_batch(mems)
+        return runs, mem_after
+    outs = [np.asarray(compile_program(r.program, cfg).run(r.memory)[0])
+            for r in runs]
+    if all(o.shape == outs[0].shape for o in outs[1:]):
+        return runs, np.stack(outs)
+    return runs, outs

@@ -26,8 +26,9 @@ import numpy as np
 
 from . import isa
 from .isa import DType, Instr, Op
-from .interp import MVEInterpreter, TraceEvent
-from .machine import ControlState, MVEConfig, cbs_touched, lane_dim_mask
+from .cost import TraceEvent
+from .machine import (ControlState, MVEConfig, apply_config, cbs_touched,
+                      lane_dim_mask)
 
 
 @dataclasses.dataclass
@@ -126,7 +127,7 @@ def compile_to_rvv(program: isa.Program, cfg: MVEConfig | None = None
                 stats.vector_instructions += 1
                 stats.mask_instructions += 1
             else:
-                _apply_config(ctrl, instr)
+                apply_config(ctrl, instr)
                 trace.append(TraceEvent(op=op, dtype=None, elements=0,
                                         cb_mask=np.zeros(cfg.num_cbs, bool)))
                 stats.config_instructions += 1
@@ -172,19 +173,6 @@ def compile_to_rvv(program: isa.Program, cfg: MVEConfig | None = None
                                 cb_mask=cbm))
         stats.vector_instructions += 1
     return trace, stats
-
-
-def _apply_config(ctrl: ControlState, instr: Instr) -> None:
-    if instr.op is Op.SET_DIMC:
-        ctrl.dim_count = instr.imm
-    elif instr.op is Op.SET_DIML:
-        ctrl.dim_lens[instr.dim] = instr.length
-    elif instr.op is Op.SET_LDSTR:
-        ctrl.ld_strides[instr.dim] = instr.stride
-    elif instr.op is Op.SET_STSTR:
-        ctrl.st_strides[instr.dim] = instr.stride
-    elif instr.op is Op.SET_WIDTH:
-        ctrl.kernel_width = instr.imm
 
 
 def mve_stats(program: isa.Program) -> RVVStats:

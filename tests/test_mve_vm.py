@@ -1,7 +1,7 @@
 """MVE virtual-machine semantics vs a straight-loop numpy oracle."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import MVEConfig, MVEInterpreter, isa
 from repro.core.isa import DType
