@@ -2,12 +2,17 @@
 the roofline table from the dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig7,fig10]
+    PYTHONPATH=src python -m benchmarks.run --only engine --json BENCH_engine.json
+    PYTHONPATH=src python -m benchmarks.run --only engine --quick   # CI smoke
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--json`` also rewrites the
+given file (the repo tracks ``BENCH_engine.json`` so the perf trajectory
+of the execution engine is versioned alongside the code).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -33,27 +38,45 @@ SECTIONS = {
     "roofline": roofline_rows,
 }
 
+# sections that understand the reduced-size smoke mode
+_QUICK_SECTIONS = {"engine": lambda: engine_vs_interp(iters=1, quick=True)}
+
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated section names")
+    ap.add_argument("--json", default=None,
+                    help="also write the collected rows to this JSON file")
+    ap.add_argument("--quick", action="store_true",
+                    help="reduced sizes/iterations where supported")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
     print("name,us_per_call,derived")
+    collected = {}
     failures = 0
     for section, fn in SECTIONS.items():
         if only and section not in only:
             continue
+        if args.quick and section in _QUICK_SECTIONS:
+            fn = _QUICK_SECTIONS[section]
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.3f},{derived}")
+                collected[name] = {"us": us, "derived": derived}
         except Exception as e:                    # keep the run going
             failures += 1
             print(f"{section}/ERROR,0,{type(e).__name__}:{e}",
                   file=sys.stdout)
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        if failures:
+            print(f"not writing {args.json}: {failures} section(s) failed",
+                  file=sys.stderr)
+        else:
+            with open(args.json, "w") as f:
+                json.dump(collected, f, indent=2)
     if failures:
         sys.exit(1)
 

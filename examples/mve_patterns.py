@@ -1,17 +1,18 @@
 """Section IV's data-parallel patterns, executed and priced.
 
-Runs every Swan-library pattern through the compiled MVE engine
-(docs/ENGINE.md; one fused jit call per pattern, validating numerics),
-prices it on the bit-serial engine vs the 1-D RVV lowering, and shows the
-same multi-dim access executed by the Pallas TPU kernels (gather +
-scatter = the transpose pattern).
+Runs every Swan-library pattern through the MVE execution engine
+(docs/ENGINE.md; the default program-as-data VM shares one XLA executable
+across the whole sweep, validating numerics per pattern), prices it on
+the bit-serial engine vs the 1-D RVV lowering, and shows the same
+multi-dim access executed by the Pallas TPU kernels (gather + scatter =
+the transpose pattern).
 
     PYTHONPATH=src python examples/mve_patterns.py
 """
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import MVEConfig, cost, rvv
+from repro.core import MVEConfig, cache_info, cost, rvv
 from repro.core.patterns import PATTERNS, run_pattern
 from repro.kernels.mdgather import mdgather
 from repro.kernels.mdscatter import mdscatter
@@ -31,6 +32,11 @@ def main():
         print(f"{name:14s} {run.library:12s} {run.dim:4s} "
               f"{tl.us(2.8):8.2f} {tl_rvv.us(2.8):8.2f} "
               f"{tl_rvv.total_cycles / tl.total_cycles:7.2f}x")
+
+    info = cache_info()
+    print(f"\n{len(PATTERNS)} programs executed through "
+          f"{info.vm_signatures} VM signature(s) / "
+          f"{info.vm_xla_compiles} XLA compilation(s)")
 
     print("\nPallas kernels: matrix transpose via mdgather + mdscatter")
     m = jnp.arange(64.0, dtype=jnp.float32)

@@ -1,9 +1,10 @@
 """Quickstart: the MVE ISA in 60 lines.
 
 Builds the paper's Figure-3 example (a 3D strided load with replication),
-executes it on the functional in-cache machine model (compiled through
-the fused-jit engine, docs/ENGINE.md; ISA reference in docs/ISA.md), and
-prices it on the bit-serial engine vs the 1D-RVV baseline.
+executes it on the functional in-cache machine model (through the
+program-as-data VM by default — docs/ENGINE.md; ISA reference in
+docs/ISA.md), and prices it on the bit-serial engine vs the 1D-RVV
+baseline.
 
     PYTHONPATH=src python examples/quickstart.py
 """

@@ -4,16 +4,19 @@ Layers:
   isa      — instruction set (Table II), stride modes, intrinsics
   machine  — cache geometry, control registers, lane flattening
   interp   — step executor (the semantic oracle; see docs/ISA.md)
-  engine   — whole-program compiler + fused jit/vmap executor
-             (docs/ENGINE.md; the default execution path)
+  engine   — whole-program compiler + executor front-end (docs/ENGINE.md):
+             mode "vm" (default) or "fused"
+  vm       — program-as-data datapath: one XLA executable per signature,
+             shared by every program with that signature
   cost     — BS/BP/BH/AC cycle models + controller/CB timeline
   rvv      — 1D long-vector baseline lowering (Figures 10/11/13)
   patterns — Section IV data-parallel patterns for 12 mobile libraries
   packing  — the MVE lane/masking abstraction reused by the LM framework
 """
 from . import (cost, engine, interp, isa, machine, packing, patterns,  # noqa: F401
-               rvv)
-from .engine import CompiledProgram, compile_program  # noqa: F401
+               rvv, vm)
+from .engine import (CompiledProgram, cache_info,  # noqa: F401
+                     compile_program)
 from .interp import MVEInterpreter  # noqa: F401
 from .machine import MVEConfig  # noqa: F401
 from .patterns import run_pattern  # noqa: F401

@@ -39,6 +39,21 @@ point — exactly the semantics of distinct in-cache instructions.
 The interpreter remains the semantic oracle: ``tests/test_engine.py``
 asserts bit-identical memory results and identical trace events on every
 registered pattern.
+
+Execution modes.  ``compile_program(..., mode=...)`` selects the executor:
+
+  "vm"    — (default) the program-as-data virtual machine
+            (:mod:`repro.core.vm`, docs/ENGINE.md "VM lowering"): the step
+            list is lowered to dense tensors and executed by one pre-jitted
+            ``lax.while_loop``/``lax.switch`` datapath shared by *every*
+            program with the same signature, so data-dependent program
+            streams (one spmm program per sparsity pattern) never recompile
+            XLA;
+  "fused" — one jitted straight-line function per program: peak
+            steady-state throughput once its (per-program) compile is paid.
+
+Both modes run/run_batch/trace identically and are equivalence-tested
+against the stepwise oracle.
 """
 from __future__ import annotations
 
@@ -52,11 +67,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import isa
-from .isa import DType, Instr, Op
+from .isa import Instr, Op
 from .cost import TraceEvent
 from .machine import (JNP_DTYPE, ControlState, MVEConfig, apply_config,
-                      cbs_touched, flatten_indices, lane_dim_mask,
-                      stream_shape, touched_lines)
+                      cbs_from_lane_mask, flatten_indices, lane_dim_mask,
+                      store_layout, stream_shape, touched_lines)
+from .vm import AotJit, VMProgram, VMUnsupported
+from .vm import cache_info as _vm_cache_info
 
 
 @dataclasses.dataclass
@@ -69,6 +86,7 @@ class _Step:
     event: Optional[TraceEvent] = None
     mask_slot: Optional[int] = None          # row in the runtime mask stack
     addr: Optional[np.ndarray] = None        # static element addresses
+    store_layout: Optional[tuple] = None     # machine.store_layout result
     # random-base (Eq. 1) accesses: pointer slice + static inner offsets
     ptr_base: Optional[int] = None
     top_len: Optional[int] = None
@@ -96,18 +114,26 @@ class CompiledProgram:
     of a given size (or a vmapped batch of them) without re-tracing.
     """
 
-    def __init__(self, program: isa.Program, cfg: MVEConfig):
+    def __init__(self, program: isa.Program, cfg: MVEConfig,
+                 mode: str = "fused"):
         self.cfg = cfg
         self.program = tuple(program)
         self.steps: List[_Step] = []
         self.n_random = 0
         self._compile_walk()
-        masks = [s.lane_mask for s in self.steps if s.mask_slot is not None]
-        self._masks = jnp.asarray(np.stack(masks)) if masks else \
-            jnp.zeros((0, cfg.lanes), dtype=bool)
-        self._zeros = jnp.zeros(cfg.lanes, dtype=jnp.float32)
-        self._jit = jax.jit(self._execute)
+        self._masks = None       # built lazily: only the fused path streams
+        self._zeros = None       # the mask stack / power-on register row
+        self._jit = AotJit(self._execute, donate_argnums=(0,))
         self._batch_jit = None
+        self._vm: Optional[VMProgram] = None
+        self.mode = mode
+        if mode == "vm":
+            try:
+                self._vm = VMProgram(self.steps, cfg, self.n_random)
+            except VMUnsupported:
+                global _VM_FALLBACKS
+                _VM_FALLBACKS += 1
+                self.mode = "fused"
 
     # -- compilation -------------------------------------------------------
     def _compile_walk(self) -> None:
@@ -132,7 +158,7 @@ class CompiledProgram:
 
             dims = ctrl.active_dims()
             lane_mask = lane_dim_mask(dims, ctrl.dim_mask, cfg.lanes)
-            cbm = cbs_touched(dims, ctrl.dim_mask, cfg)
+            cbm = cbs_from_lane_mask(lane_mask, cfg)
             elements = int(lane_mask.sum())
             step = _Step(instr, lane_mask=lane_mask, cb_mask=cbm,
                          mask_slot=n_masked)
@@ -164,6 +190,8 @@ class CompiledProgram:
                         addr += np.where(coords[:, d] >= 0,
                                          coords[:, d], 0) * strides[d]
                     step.addr = addr
+                    if store:
+                        step.store_layout = store_layout(addr, lane_mask)
                     lines = touched_lines(addr, lane_mask,
                                           instr.dtype.nbytes)
                 step.event = TraceEvent(op, instr.dtype, elements, cbm,
@@ -212,19 +240,36 @@ class CompiledProgram:
                 regs[instr.vd] = jnp.where(jmask, gathered, old(instr.vd))
                 continue
             if op in (Op.SST, Op.RST):
-                addr = self._address_vector(step, memory)
+                src = old(instr.vs1).astype(memory.dtype)
                 if step.rand_slot is not None:
+                    # Runtime addresses: masked lanes dropped out of
+                    # bounds; later lanes win on address collisions
+                    # (scatter order matches a sequential loop).
+                    addr = self._address_vector(step, memory)
                     rand_addrs[step.rand_slot] = addr
-                src = old(instr.vs1)
-                # Drop masked lanes; later lanes win on address collisions
-                # (well-defined scatter order, matches a sequential loop).
-                idx = jnp.where(jmask, addr, -1)
-                valid = idx >= 0
-                safe_idx = jnp.where(valid, idx, 0)
-                mem_dt = memory.dtype
-                update = jnp.where(valid, src.astype(mem_dt),
-                                   memory[safe_idx])
-                memory = memory.at[safe_idx].set(update)
+                    memory = memory.at[jnp.where(jmask, addr, -1)].set(
+                        src, mode="drop")
+                    continue
+                layout = step.store_layout
+                if layout[0] == "contig":
+                    # Dense store (addr = base + lane): a slice blend
+                    # instead of XLA:CPU's scalar scatter loop.  Lanes
+                    # past the end of memory are dropped, as before.
+                    base = layout[1]
+                    w = min(cfg.lanes, memory.shape[0] - base)
+                    if w > 0:
+                        window = memory[base:base + w]
+                        memory = memory.at[base:base + w].set(
+                            jnp.where(jmask[:w], src[:w], window))
+                elif layout[0] == "scatter":
+                    # Pre-sorted collision-ordered indices: masked lanes
+                    # and all but the last writer per address are out of
+                    # bounds, so one sorted-unique drop-scatter keeps
+                    # last-lane-wins semantics without the old gather.
+                    memory = memory.at[jnp.asarray(layout[1])].set(
+                        src[jnp.asarray(layout[2])], mode="drop",
+                        indices_are_sorted=True, unique_indices=True)
+                # ("none",): fully masked store — no effect
                 continue
 
             def finish(result, instr=instr, jmask=jmask, dt=dt, old=old):
@@ -297,11 +342,49 @@ class CompiledProgram:
         return ptrs[step.top_idx] + jnp.asarray(step.offsets)
 
     # -- public API --------------------------------------------------------
+    def _fused_operands(self):
+        """Mask-stack / zeros operands of the fused function (uploaded on
+        first fused execution only — the VM path never needs them)."""
+        if self._masks is None:
+            masks = [s.lane_mask for s in self.steps
+                     if s.mask_slot is not None]
+            self._masks = jnp.asarray(np.stack(masks)) if masks else \
+                jnp.zeros((0, self.cfg.lanes), dtype=bool)
+            self._zeros = jnp.zeros(self.cfg.lanes, dtype=jnp.float32)
+        return self._masks, self._zeros
+
+    def _donatable(self, memory) -> jnp.ndarray:
+        """The executables donate (write through) their memory operand, so
+        it must be a jax-owned buffer: copy=True protects caller-owned
+        device arrays and prevents zero-copy aliasing of caller numpy
+        buffers (same-dtype CPU device_put does not copy)."""
+        return jnp.array(memory, copy=True)
+
+    @staticmethod
+    def _vm_memory_dtype(memory) -> bool:
+        """True when the memory image is float32-canonical (float64 or
+        float32 — what every pattern and the 32-bit-mode eager executors
+        use); reads ``memory.dtype`` without materializing the array."""
+        dtype = getattr(memory, "dtype", None)
+        if dtype is None:
+            dtype = np.asarray(memory).dtype
+        return np.dtype(dtype) in (np.float64, np.float32)
+
+    def _use_vm(self, memory) -> bool:
+        """Route through the VM datapath unless the memory dtype needs the
+        exact eager semantics of the per-program fused function."""
+        return self.mode == "vm" and self._vm_memory_dtype(memory)
+
     def run(self, memory) -> Tuple[jnp.ndarray, ExecutionResult]:
         """Execute on one memory image; returns ``(memory, state)`` exactly
-        like :meth:`MVEInterpreter.run` (trace included)."""
-        mem, regs, tag, rand_addrs = self._jit(
-            jnp.asarray(memory), self._masks, self._zeros)
+        like :meth:`MVEInterpreter.run` (trace included).  Dispatches to
+        the VM datapath or the per-program fused function per ``mode``."""
+        if self._use_vm(memory):
+            mem, regs, tag, rand_addrs = self._vm.run(memory)
+        else:
+            masks, zeros = self._fused_operands()
+            mem, regs, tag, rand_addrs = self._jit(
+                self._donatable(memory), masks, zeros)
         trace = self._finalize_trace(rand_addrs)
         # Fresh ctrl/trace objects per run: callers may mutate the returned
         # state (the stepwise oracle hands out fresh state too), and this
@@ -314,7 +397,7 @@ class CompiledProgram:
     def run_batch(self, memories) -> Tuple[jnp.ndarray,
                                            Dict[int, jnp.ndarray],
                                            jnp.ndarray]:
-        """vmap the fused program over a leading batch of memory images.
+        """Evaluate the program over a leading batch of memory images.
 
         Returns ``(memories, regs, tag)`` with a leading batch axis on
         every array.  No trace is produced: the cost-model trace of a
@@ -322,12 +405,46 @@ class CompiledProgram:
         programs each element may touch different cache lines — use
         :meth:`run` on a representative image to price it).
         """
-        if self._batch_jit is None:
-            self._batch_jit = jax.jit(
-                jax.vmap(self._execute, in_axes=(0, None, None)))
-        mem, regs, tag, _ = self._batch_jit(
-            jnp.asarray(memories), self._masks, self._zeros)
+        if self._use_vm(memories):
+            return self._vm.run_batch(memories)
+        masks, zeros = self._fused_operands()
+        mem, regs, tag, _ = self._get_batch_jit()(
+            self._donatable(memories), masks, zeros)
         return mem, dict(regs), tag
+
+    def _get_batch_jit(self) -> AotJit:
+        if self._batch_jit is None:
+            self._batch_jit = AotJit(
+                jax.vmap(self._execute, in_axes=(0, None, None)),
+                donate_argnums=(0,))
+        return self._batch_jit
+
+    def warmup(self, memory_size, batch: Optional[int] = None,
+               dtype=jnp.float32) -> "CompiledProgram":
+        """AOT-compile (``.lower().compile()``) the executable for a memory
+        geometry, removing the silent first-call compile cliff.
+
+        ``memory_size`` is an element count (or an example memory image);
+        pass ``batch`` to warm the vmapped batch executable instead.
+        Returns ``self`` so calls chain with :func:`compile_program`.
+        """
+        if not isinstance(memory_size, int):
+            memory_size = int(np.asarray(memory_size).shape[-1])
+        dtype = jax.dtypes.canonicalize_dtype(dtype)
+        # Warm the executor run() will actually pick for this dtype: the
+        # VM datapath for float32-canonical images, the fused jit
+        # otherwise (matching ``_use_vm``).
+        if self.mode == "vm" and np.dtype(dtype) in (np.float64, np.float32):
+            self._vm.warmup(memory_size, batch)
+            return self
+        shape = (memory_size,) if batch is None else (batch, memory_size)
+        mem = jax.ShapeDtypeStruct(shape, dtype)
+        masks, zeros = self._fused_operands()
+        if batch is None:
+            self._jit.warmup(mem, masks, zeros)
+        else:
+            self._get_batch_jit().warmup(mem, masks, zeros)
+        return self
 
     def _finalize_trace(self, rand_addrs) -> List[TraceEvent]:
         trace: List[TraceEvent] = []
@@ -353,35 +470,92 @@ class CompiledProgram:
 # ---------------------------------------------------------------------------
 # Compile cache: programs are tuples of frozen Instr, so they hash.  Bounded
 # LRU — data-dependent program streams (e.g. one program per sparsity
-# pattern) would otherwise retain a jitted executable per variant forever.
+# pattern) would otherwise retain a lowering per variant forever.  Under
+# ``mode="vm"`` an eviction only drops host-side tables; the XLA executable
+# lives in the signature cache (:mod:`repro.core.vm`) and is never retraced.
 # ---------------------------------------------------------------------------
 
-_CACHE: "OrderedDict[Tuple[Tuple[Instr, ...], MVEConfig], CompiledProgram]" \
-    = OrderedDict()
+_CACHE: "OrderedDict[tuple, CompiledProgram]" = OrderedDict()
 _CACHE_CAPACITY = 256
+_HITS = _MISSES = _EVICTIONS = 0
+_VM_FALLBACKS = 0
+
+#: Default execution mode: ``"vm"`` (program-as-data datapath, one XLA
+#: compilation per signature) or ``"fused"`` (one jitted function per
+#: program — peak steady-state throughput).  The stepwise interpreter
+#: remains the semantic oracle for both.
+DEFAULT_MODE = "vm"
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineCacheInfo:
+    """Snapshot of the compile caches (see :func:`cache_info`)."""
+
+    program_hits: int          # compile_program served from the LRU
+    program_misses: int        # fresh compile walks (+ VM lowerings)
+    program_evictions: int
+    program_size: int
+    vm_fallbacks: int          # vm-mode requests lowered to fused instead
+    vm_signatures: int         # distinct VM executables alive
+    vm_hits: int               # VM executor-cache hits
+    vm_xla_compiles: int       # distinct VM XLA compilations (incl. batch)
+
+
+def cache_info() -> EngineCacheInfo:
+    """Hit/miss/eviction counters for the program LRU plus the VM
+    signature-keyed executable cache — the observability handle for the
+    "compile the machine once" contract (docs/ENGINE.md)."""
+    v = _vm_cache_info()
+    return EngineCacheInfo(
+        program_hits=_HITS, program_misses=_MISSES,
+        program_evictions=_EVICTIONS, program_size=len(_CACHE),
+        vm_fallbacks=_VM_FALLBACKS, vm_signatures=v.signatures,
+        vm_hits=v.hits, vm_xla_compiles=v.xla_compiles)
 
 
 def compile_program(program: isa.Program,
-                    cfg: MVEConfig | None = None) -> CompiledProgram:
+                    cfg: MVEConfig | None = None,
+                    mode: str | None = None) -> CompiledProgram:
     """Compile (with caching) an MVE program for the given machine config.
 
     The returned :class:`CompiledProgram` is memory-image independent: the
     same object executes any number of images (or a vmapped batch) without
     re-tracing, and repeated calls with an equal program return the cached
-    compilation.
+    compilation.  ``mode`` selects the executor (default
+    :data:`DEFAULT_MODE`): ``"vm"`` shares one XLA executable across every
+    program with the same signature; ``"fused"`` emits one jitted function
+    per program.  Programs the VM cannot host fall back to fused
+    (``cache_info().vm_fallbacks``).
     """
+    global _HITS, _MISSES, _EVICTIONS
     cfg = cfg or MVEConfig()
-    key = (tuple(program), cfg)
+    mode = mode or DEFAULT_MODE
+    if mode not in ("vm", "fused"):
+        raise ValueError(f"unknown engine mode {mode!r}")
+    key = (tuple(program), cfg, mode)
     cp = _CACHE.get(key)
     if cp is None:
-        cp = _CACHE[key] = CompiledProgram(program, cfg)
+        _MISSES += 1
+        cp = _CACHE[key] = CompiledProgram(program, cfg, mode=mode)
+        if cp.mode != mode:
+            # VM-unsupported fallback: alias the fused key too, so an
+            # explicit mode="fused" request reuses this compilation
+            # instead of walking and tracing the same program again.
+            _CACHE.setdefault((key[0], key[1], cp.mode), cp)
         while len(_CACHE) > _CACHE_CAPACITY:
             _CACHE.popitem(last=False)
+            _EVICTIONS += 1
     else:
+        _HITS += 1
         _CACHE.move_to_end(key)
     return cp
 
 
 def clear_cache() -> None:
-    """Drop all cached compilations (tests / memory pressure)."""
+    """Drop all cached compilations and reset the LRU counters (tests /
+    memory pressure).  VM executables persist — clear them separately via
+    :func:`repro.core.vm.clear_executors` when measuring cold starts."""
+    global _HITS, _MISSES, _EVICTIONS, _VM_FALLBACKS
     _CACHE.clear()
+    _HITS = _MISSES = _EVICTIONS = 0
+    _VM_FALLBACKS = 0

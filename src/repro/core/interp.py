@@ -50,19 +50,24 @@ class MVEInterpreter:
     ``compiled=True`` (default) routes :meth:`run` through
     :func:`repro.core.engine.compile_program`; ``compiled=False`` (or
     :meth:`run_stepwise`) uses the original per-instruction loop.
+    ``mode`` picks the compiled executor — ``"vm"`` (program-as-data
+    datapath, one XLA executable per signature) or ``"fused"`` (one jitted
+    function per program); ``None`` uses the engine default.
     """
 
     def __init__(self, config: MVEConfig | None = None,
-                 compiled: bool = True):
+                 compiled: bool = True, mode: str | None = None):
         self.cfg = config or MVEConfig()
         self.compiled = compiled
+        self.mode = mode
 
     # -- public API --------------------------------------------------------
     def run(self, program: isa.Program, memory: jnp.ndarray,
             ) -> Tuple[jnp.ndarray, MachineState]:
         if self.compiled:
             from .engine import compile_program
-            return compile_program(program, self.cfg).run(memory)
+            return compile_program(program, self.cfg,
+                                   mode=self.mode).run(memory)
         return self.run_stepwise(program, memory)
 
     def run_stepwise(self, program: isa.Program, memory: jnp.ndarray,

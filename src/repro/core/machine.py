@@ -20,7 +20,7 @@ documented with worked examples in docs/ISA.md.
 from __future__ import annotations
 
 import dataclasses
-import math
+import functools
 from typing import List, Tuple
 
 import jax.numpy as jnp
@@ -144,7 +144,15 @@ def flatten_indices(dims: Tuple[int, ...], lanes: int) -> np.ndarray:
 
     Returns an int array of shape (lanes, len(dims)); lanes beyond
     prod(dims) are marked inactive with -1 in every coordinate.
+    Memoized: compile walks resolve the same (dims, lanes) pair for every
+    instruction under one configuration, and the result is pure.  Treat
+    the returned array as read-only.
     """
+    return _flatten_indices_cached(tuple(dims), lanes)
+
+
+@functools.lru_cache(maxsize=512)
+def _flatten_indices_cached(dims: Tuple[int, ...], lanes: int) -> np.ndarray:
     total = int(np.prod(dims))
     lane = np.arange(lanes, dtype=np.int64)
     coords = np.full((lanes, len(dims)), -1, dtype=np.int64)
@@ -153,6 +161,7 @@ def flatten_indices(dims: Tuple[int, ...], lanes: int) -> np.ndarray:
     for d, length in enumerate(dims):       # d=0 is x (fastest)
         coords[:, d] = np.where(active, rem % length, -1)
         rem = rem // length
+    coords.setflags(write=False)
     return coords
 
 
@@ -222,11 +231,65 @@ def touched_lines(addr: np.ndarray, mask: np.ndarray, nbytes: int) -> int:
     return int(np.unique((addr[mask] * nbytes) // 64).size)
 
 
+def next_pow2(n: int) -> int:
+    """Smallest power of two >= n (bucketing helper for the executors)."""
+    return 1 << max(int(n) - 1, 0).bit_length()
+
+
+# Out-of-bounds scatter sentinel base.  Dropped lanes get ``_OOB + lane`` so
+# a sorted-unique index vector stays sorted and unique after masking (JAX
+# ``mode="drop"`` scatters skip out-of-bounds rows; every modeled memory is
+# far below 2**30 elements).
+OOB_BASE = 1 << 30
+
+
+def store_layout(addr: np.ndarray, mask: np.ndarray):
+    """Classify a static store's per-lane addresses for the executors.
+
+    Both the fused engine and the VM avoid XLA:CPU's scalar scatter loop
+    (~1 ms per 8K-lane scatter) whenever the layout allows:
+
+    * ``("none",)``            — no active lane; the store is a no-op.
+    * ``("contig", base)``     — every active lane ``l`` writes ``base + l``
+      (true for all dense row-major-continuation stores, i.e. every static
+      store in the Section-IV patterns): executable as a slice blend.
+    * ``("scatter", idx, perm)`` — general case: ``idx`` is a sorted,
+      unique, collision-resolved index vector (masked lanes and all but the
+      last writer of each address are pushed out of bounds, preserving the
+      last-lane-wins scatter order) and ``perm`` reorders the source lanes
+      to match.
+    """
+    lanes = addr.shape[0]
+    if not mask.any():
+        return ("none",)
+    lane = np.arange(lanes, dtype=np.int64)
+    delta = addr[mask] - lane[mask]
+    base = int(delta[0])
+    if base >= 0 and (delta == base).all():
+        return ("contig", base)
+    # Keep, per distinct address, only the highest active lane (last wins).
+    act = np.flatnonzero(mask)
+    order_a = np.argsort(addr[act], kind="stable")
+    sorted_a = addr[act][order_a]
+    last = np.ones(len(act), dtype=bool)
+    last[:-1] = sorted_a[:-1] != sorted_a[1:]
+    winners = act[order_a[last]]
+    key = OOB_BASE + lane
+    key[winners] = addr[winners]
+    perm = np.argsort(key, kind="stable")
+    return ("scatter", key[perm].astype(np.int64), perm.astype(np.int32))
+
+
 def cbs_touched(dims: Tuple[int, ...], dim_mask: np.ndarray,
                 cfg: MVEConfig) -> np.ndarray:
     """Which control blocks have at least one active lane (mask bit-vector
 
     the controller keeps per instruction, Section V-B)."""
-    lm = lane_dim_mask(dims, dim_mask, cfg.lanes)
-    per_cb = lm.reshape(cfg.num_cbs, cfg.lanes_per_cb)
+    return cbs_from_lane_mask(lane_dim_mask(dims, dim_mask, cfg.lanes), cfg)
+
+
+def cbs_from_lane_mask(lane_mask: np.ndarray, cfg: MVEConfig) -> np.ndarray:
+    """CB participation derived from an already-expanded lane mask (the
+    compile walks have one in hand; avoids re-expanding the dim mask)."""
+    per_cb = lane_mask.reshape(cfg.num_cbs, cfg.lanes_per_cb)
     return per_cb.any(axis=1)

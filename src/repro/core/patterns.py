@@ -694,18 +694,19 @@ RVV_COMPARISON_SET = ["daxpy", "reduction", "fir", "xor_cipher", "png_up",
 # ---------------------------------------------------------------------------
 
 def run_pattern(run: PatternRun, cfg: MVEConfig | None = None,
-                compiled: bool = True):
+                compiled: bool = True, mode: str | None = None):
     """Execute one pattern; returns ``(mem_after, state)``.
 
     ``compiled=True`` goes through :func:`repro.core.engine.compile_program`
-    (cached, fused jit); ``compiled=False`` uses the step-interpreter
-    oracle.  Both return interchangeable state objects carrying the
-    cost-model trace.
+    (cached); ``compiled=False`` uses the step-interpreter oracle.  Both
+    return interchangeable state objects carrying the cost-model trace.
+    ``mode`` selects the compiled executor (``"vm"``/``"fused"``; ``None``
+    = engine default, the signature-shared VM).
     """
     cfg = cfg or MVEConfig()
     if compiled:
         from .engine import compile_program
-        return compile_program(run.program, cfg).run(run.memory)
+        return compile_program(run.program, cfg, mode=mode).run(run.memory)
     from .interp import MVEInterpreter
     return MVEInterpreter(cfg, compiled=False).run_stepwise(
         run.program, run.memory)
@@ -713,14 +714,17 @@ def run_pattern(run: PatternRun, cfg: MVEConfig | None = None,
 
 def sweep(names: Optional[Sequence[str]] = None,
           cfg: MVEConfig | None = None, compiled: bool = True,
-          validate: bool = True) -> Dict[str, Tuple[PatternRun, object]]:
+          validate: bool = True, mode: str | None = None,
+          ) -> Dict[str, Tuple[PatternRun, object]]:
     """Run every named pattern (default: all) and return name -> (run,
-    state).  This is the fast path for full-library sweeps: with the
-    compiled engine each pattern compiles once and replays from cache."""
+    state).  This is the fast path for full-library sweeps: under the VM
+    every pattern — and every data-dependent variant of one — replays
+    through a single signature-keyed XLA executable."""
     out: Dict[str, Tuple[PatternRun, object]] = {}
     for name in (names if names is not None else sorted(PATTERNS)):
         run = PATTERNS[name]()
-        mem_after, state = run_pattern(run, cfg, compiled=compiled)
+        mem_after, state = run_pattern(run, cfg, compiled=compiled,
+                                       mode=mode)
         if validate:
             run.check(np.asarray(mem_after), state)
         out[name] = (run, state)
@@ -728,16 +732,18 @@ def sweep(names: Optional[Sequence[str]] = None,
 
 
 def run_pattern_batch(name: str, seeds: Sequence[int],
-                      cfg: MVEConfig | None = None, **kw):
+                      cfg: MVEConfig | None = None,
+                      mode: str | None = None, **kw):
     """Evaluate one pattern across many input images in a single vmapped
     call.
 
     Builds the pattern for each seed; when every seed produces the same
     program (true for the purely strided kernels — the program depends
     only on sizes), the memory images are stacked and executed by one
-    ``jax.vmap``-batched fused function.  Data-dependent programs (e.g.
-    ``spmm``, whose instruction stream follows the sparsity pattern) fall
-    back to per-image compiled runs.
+    ``jax.vmap``-batched call.  Data-dependent programs (e.g. ``spmm``,
+    whose instruction stream follows the sparsity pattern) fall back to
+    per-image runs — under the VM (default mode) every such variant still
+    replays through one shared XLA executable instead of recompiling.
 
     Returns ``(runs, mem_after)`` where ``mem_after`` has a leading seed
     axis aligned with ``runs`` (a list of per-seed arrays when the
@@ -750,12 +756,13 @@ def run_pattern_batch(name: str, seeds: Sequence[int],
     same_size = all(r.memory.shape == runs[0].memory.shape
                     for r in runs[1:])
     if same_prog and same_size:
-        cp = compile_program(runs[0].program, cfg)
+        cp = compile_program(runs[0].program, cfg, mode=mode)
         mems = np.stack([r.memory for r in runs])
         mem_after, _, _ = cp.run_batch(mems)
         return runs, mem_after
-    outs = [np.asarray(compile_program(r.program, cfg).run(r.memory)[0])
-            for r in runs]
+    outs = [np.asarray(
+        compile_program(r.program, cfg, mode=mode).run(r.memory)[0])
+        for r in runs]
     if all(o.shape == outs[0].shape for o in outs[1:]):
         return runs, np.stack(outs)
     return runs, outs

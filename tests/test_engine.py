@@ -1,9 +1,11 @@
-"""Compiled engine vs the step-interpreter oracle (docs/ENGINE.md).
+"""Fused compiled engine vs the step-interpreter oracle (docs/ENGINE.md).
 
 The equivalence contract: for every registered Section-IV pattern the
 engine must produce bit-identical memory, registers and Tag latch, and an
 identical cost-model trace (every TraceEvent field, including the exact
-cache-line counts of random-base accesses).
+cache-line counts of random-base accesses).  This file pins
+``mode="fused"``; the program-as-data VM (the default mode) has its own
+oracle suite in ``tests/test_vm.py``, which covers both executors.
 """
 import numpy as np
 import pytest
@@ -19,7 +21,7 @@ ORACLE = MVEInterpreter(CFG, compiled=False)
 
 def _assert_equivalent(program, memory):
     mem_i, st_i = ORACLE.run_stepwise(program, memory)
-    cp = compile_program(program, CFG)
+    cp = compile_program(program, CFG, mode="fused")
     mem_e, st_e = cp.run(memory)
     np.testing.assert_array_equal(np.asarray(mem_i), np.asarray(mem_e))
     assert set(st_i.regs) == set(st_e.regs)
