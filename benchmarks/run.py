@@ -20,7 +20,7 @@ from . import paper_claims
 from .engine_bench import engine_vs_interp
 from .kernels_bench import kernel_microbench
 from .roofline import roofline_rows
-from .serving_bench import serving_throughput
+from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
 
 SECTIONS = {
     "engine": engine_vs_interp,
@@ -34,12 +34,16 @@ SECTIONS = {
     "fig13": paper_claims.fig13_schemes,
     "tableV": paper_claims.tableV_area,
     "kernels": kernel_microbench,
-    "serving": serving_throughput,
+    "serving": mve_serving,
+    "serving_lm": serving_throughput,
     "roofline": roofline_rows,
 }
 
 # sections that understand the reduced-size smoke mode
-_QUICK_SECTIONS = {"engine": lambda: engine_vs_interp(iters=1, quick=True)}
+_QUICK_SECTIONS = {
+    "engine": lambda: engine_vs_interp(iters=1, quick=True),
+    "serving": mve_serving_quick,
+}
 
 
 def main() -> None:

@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import copy
 import dataclasses
+import threading
 from collections import OrderedDict
 from typing import Dict, List, Optional, Tuple
 
@@ -375,16 +376,26 @@ class CompiledProgram:
         exact eager semantics of the per-program fused function."""
         return self.mode == "vm" and self._vm_memory_dtype(memory)
 
-    def run(self, memory) -> Tuple[jnp.ndarray, ExecutionResult]:
-        """Execute on one memory image; returns ``(memory, state)`` exactly
-        like :meth:`MVEInterpreter.run` (trace included).  Dispatches to
-        the VM datapath or the per-program fused function per ``mode``."""
+    def run_async(self, memory):
+        """Dispatch one execution without blocking on host results.
+
+        Returns an opaque pending handle for :meth:`finalize_run`.  JAX's
+        async dispatch (CPU included) keeps computing while the caller
+        prepares the next request, so a serving loop
+        (:mod:`repro.runtime.scheduler`) pays one sync per drain cycle
+        instead of one per request."""
         if self._use_vm(memory):
-            mem, regs, tag, rand_addrs = self._vm.run(memory)
+            return ("vm", self._vm.run_async(memory))
+        masks, zeros = self._fused_operands()
+        return ("fused", self._jit(self._donatable(memory), masks, zeros))
+
+    def finalize_run(self, pending) -> Tuple[jnp.ndarray, ExecutionResult]:
+        """Materialize a :meth:`run_async` dispatch into ``(mem, state)``."""
+        kind, out = pending
+        if kind == "vm":
+            mem, regs, tag, rand_addrs = self._vm.finalize(out)
         else:
-            masks, zeros = self._fused_operands()
-            mem, regs, tag, rand_addrs = self._jit(
-                self._donatable(memory), masks, zeros)
+            mem, regs, tag, rand_addrs = out
         trace = self._finalize_trace(rand_addrs)
         # Fresh ctrl/trace objects per run: callers may mutate the returned
         # state (the stepwise oracle hands out fresh state too), and this
@@ -393,6 +404,12 @@ class CompiledProgram:
                                 ctrl=copy.deepcopy(self.final_ctrl),
                                 trace=trace)
         return mem, state
+
+    def run(self, memory) -> Tuple[jnp.ndarray, ExecutionResult]:
+        """Execute on one memory image; returns ``(memory, state)`` exactly
+        like :meth:`MVEInterpreter.run` (trace included).  Dispatches to
+        the VM datapath or the per-program fused function per ``mode``."""
+        return self.finalize_run(self.run_async(memory))
 
     def run_batch(self, memories) -> Tuple[jnp.ndarray,
                                            Dict[int, jnp.ndarray],
@@ -405,12 +422,37 @@ class CompiledProgram:
         programs each element may touch different cache lines — use
         :meth:`run` on a representative image to price it).
         """
+        return self.finalize_batch(self.run_batch_async(memories))
+
+    def run_batch_async(self, memories):
+        """Dispatch a batched execution without blocking (see
+        :meth:`run_async`); finalize with :meth:`finalize_batch`."""
         if self._use_vm(memories):
-            return self._vm.run_batch(memories)
+            return ("vm", self._vm.run_batch_async(memories))
         masks, zeros = self._fused_operands()
         mem, regs, tag, _ = self._get_batch_jit()(
             self._donatable(memories), masks, zeros)
-        return mem, dict(regs), tag
+        return ("fused", (mem, dict(regs), tag))
+
+    def finalize_batch(self, pending):
+        kind, out = pending
+        if kind == "vm":
+            return self._vm.finalize_batch(out)
+        return out
+
+    def batch_group_key(self, memory) -> tuple:
+        """Scheduling key: requests whose keys are equal can be stacked
+        into one ``run_batch`` dispatch and — under ``mode="vm"`` — share
+        one signature-keyed XLA executable.  The key is the VM signature
+        bucket for VM-routed requests (program identity rides along:
+        batching stacks *memories* under one program) and the program
+        itself for fused-routed ones."""
+        mem = np.asarray(memory) if not hasattr(memory, "shape") else memory
+        size = int(mem.shape[-1])
+        dtype = str(getattr(mem, "dtype", "float64"))
+        if self._use_vm(memory):
+            return ("vm", self._vm._signature(size), size, dtype)
+        return ("fused", id(self), size, dtype)
 
     def _get_batch_jit(self) -> AotJit:
         if self._batch_jit is None:
@@ -477,6 +519,7 @@ class CompiledProgram:
 
 _CACHE: "OrderedDict[tuple, CompiledProgram]" = OrderedDict()
 _CACHE_CAPACITY = 256
+_CACHE_LOCK = threading.RLock()   # submit() may compile from many threads
 _HITS = _MISSES = _EVICTIONS = 0
 _VM_FALLBACKS = 0
 
@@ -533,10 +576,25 @@ def compile_program(program: isa.Program,
     if mode not in ("vm", "fused"):
         raise ValueError(f"unknown engine mode {mode!r}")
     key = (tuple(program), cfg, mode)
-    cp = _CACHE.get(key)
-    if cp is None:
+    with _CACHE_LOCK:
+        cp = _CACHE.get(key)
+        if cp is not None:
+            _HITS += 1
+            _CACHE.move_to_end(key)
+            return cp
+    # Construct outside the lock: a multi-ms compile walk must not stall
+    # concurrent lookups (scheduler submit() runs on many client threads).
+    # A racing duplicate construction is possible but harmless — the
+    # first insertion wins below and the loser is dropped.
+    built = CompiledProgram(program, cfg, mode=mode)
+    with _CACHE_LOCK:
+        cp = _CACHE.get(key)
+        if cp is not None:
+            _HITS += 1
+            _CACHE.move_to_end(key)
+            return cp
         _MISSES += 1
-        cp = _CACHE[key] = CompiledProgram(program, cfg, mode=mode)
+        cp = _CACHE[key] = built
         if cp.mode != mode:
             # VM-unsupported fallback: alias the fused key too, so an
             # explicit mode="fused" request reuses this compilation
@@ -545,9 +603,6 @@ def compile_program(program: isa.Program,
         while len(_CACHE) > _CACHE_CAPACITY:
             _CACHE.popitem(last=False)
             _EVICTIONS += 1
-    else:
-        _HITS += 1
-        _CACHE.move_to_end(key)
     return cp
 
 
@@ -556,6 +611,7 @@ def clear_cache() -> None:
     memory pressure).  VM executables persist — clear them separately via
     :func:`repro.core.vm.clear_executors` when measuring cold starts."""
     global _HITS, _MISSES, _EVICTIONS, _VM_FALLBACKS
-    _CACHE.clear()
-    _HITS = _MISSES = _EVICTIONS = 0
-    _VM_FALLBACKS = 0
+    with _CACHE_LOCK:
+        _CACHE.clear()
+        _HITS = _MISSES = _EVICTIONS = 0
+        _VM_FALLBACKS = 0

@@ -820,15 +820,13 @@ class VMProgram:
     def _args(self, mem_size: int):
         return (jnp.int32(mem_size - 1), jnp.int32(self.n_steps))
 
-    def run(self, memory):
-        """Execute one memory image; returns ``(mem, regs, tag, rand)``
-        with ``rand`` the per-random-op address vectors for the trace.
-
-        Memory and registers come back as host (numpy) views of the fixed-
-        shape device outputs: slicing/casting them on device would compile
-        one trivial XLA executable per distinct program geometry, defeating
-        the signature sharing.
-        """
+    def run_async(self, memory):
+        """Dispatch one memory image without waiting: returns an opaque
+        pending handle whose device buffers are still being computed.
+        Pass it to :meth:`finalize` to materialize host results — the
+        split lets a serving loop (:mod:`repro.runtime.scheduler`) enqueue
+        many executions back to back and pay one sync, instead of a
+        host round trip per request."""
         mem_size = np.asarray(memory).shape[0]
         sig = self._signature(mem_size)
         ex = _executor(sig)
@@ -836,21 +834,44 @@ class VMProgram:
         # this buffer — it must be jax-owned, not a zero-copy alias of the
         # short-lived numpy padding buffer.
         buf = jnp.array(self._pad_memory(memory, sig[3]), copy=True)
-        mem, regfile, tag, addrs = ex.single(
-            buf, *self._args(mem_size), *self.tables)
+        out = ex.single(buf, *self._args(mem_size), *self.tables)
+        return (mem_size, out)
+
+    def finalize(self, pending):
+        """Host results of a :meth:`run_async` dispatch (blocks on it).
+
+        Memory and registers come back as host (numpy) views of the fixed-
+        shape device outputs: slicing/casting them on device would compile
+        one trivial XLA executable per distinct program geometry, defeating
+        the signature sharing.
+        """
+        mem_size, (mem, regfile, tag, addrs) = pending
         return (np.array(np.asarray(mem)[:mem_size]), self._regs(regfile),
                 tag, self._rand_addrs(addrs))
 
-    def run_batch(self, memories):
+    def run(self, memory):
+        """Execute one memory image; returns ``(mem, regs, tag, rand)``
+        with ``rand`` the per-random-op address vectors for the trace."""
+        return self.finalize(self.run_async(memory))
+
+    def run_batch_async(self, memories):
+        """Batched :meth:`run_async`: one vmapped dispatch over a leading
+        batch of memory images; finalize with :meth:`finalize_batch`."""
         mems = np.asarray(memories)
         mem_size = mems.shape[-1]
         sig = self._signature(mem_size)
         ex = _executor(sig)
         buf = jnp.array(self._pad_memory(mems, sig[3]), copy=True)
-        mem, regfile, tag, _ = ex.batch(
-            buf, *self._args(mem_size), *self.tables)
+        out = ex.batch(buf, *self._args(mem_size), *self.tables)
+        return (mem_size, out)
+
+    def finalize_batch(self, pending):
+        mem_size, (mem, regfile, tag, _) = pending
         return (np.array(np.asarray(mem)[..., :mem_size]),
                 self._regs(regfile, batched=True), tag)
+
+    def run_batch(self, memories):
+        return self.finalize_batch(self.run_batch_async(memories))
 
     def warmup(self, mem_size: int, batch: Optional[int] = None) -> None:
         sig = self._signature(mem_size)

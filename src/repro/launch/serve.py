@@ -151,3 +151,101 @@ class ContinuousBatchingEngine:
     @property
     def occupancy(self) -> float:
         return self.grid.occupancy()
+
+
+# ---------------------------------------------------------------------------
+# MVE program serving: the front door over the signature-batched scheduler.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ProgramRequest:
+    """One client's MVE program submission (compare :class:`Request`).
+
+    Timing and results delegate to the underlying scheduler
+    :class:`~repro.runtime.scheduler.Ticket` — one source of truth."""
+
+    rid: int
+    program: tuple
+    memory: np.ndarray
+    ticket: object = None                # runtime.scheduler.Ticket
+    result: Optional[object] = None      # ServeResult once served
+
+    @property
+    def submitted_at(self) -> float:
+        return self.ticket.submitted_at
+
+    @property
+    def done_at(self) -> Optional[float]:
+        return self.ticket.done_at
+
+    @property
+    def latency(self) -> float:
+        """Submit-to-completion seconds; raises until finished."""
+        return self.ticket.latency
+
+
+class MVEProgramServer:
+    """Serving facade for MVE programs: request bookkeeping + latency
+    accounting over :class:`repro.runtime.scheduler.MVEScheduler`.
+
+    The LM path above packs concurrent *decode* requests onto the lane
+    grid; this path packs concurrent *program* requests onto vmapped
+    batch dispatches grouped by VM signature — the same
+    dimension-level-batching idea one level up the stack.  Used by
+    ``benchmarks/serving_bench.py`` to replay the Table III workload mix.
+
+    Thread-safe like the scheduler it wraps; ``keep_done`` bounds the
+    finished-request history a long-lived server retains.
+    """
+
+    def __init__(self, scheduler=None, keep_done: int = 4096,
+                 **scheduler_kwargs):
+        import threading
+        from collections import OrderedDict
+
+        from ..runtime.scheduler import MVEScheduler
+        self.scheduler = scheduler or MVEScheduler(**scheduler_kwargs)
+        self.keep_done = keep_done
+        self._lock = threading.Lock()
+        self._next_rid = 0
+        self._inflight: "OrderedDict[int, ProgramRequest]" = OrderedDict()
+        self._done: "OrderedDict[int, ProgramRequest]" = OrderedDict()
+
+    def submit(self, program, memory) -> ProgramRequest:
+        ticket = self.scheduler.submit(program, memory)
+        with self._lock:
+            req = ProgramRequest(rid=self._next_rid,
+                                 program=tuple(program), memory=memory,
+                                 ticket=ticket)
+            self._next_rid += 1
+            self._inflight[req.rid] = req
+        return req
+
+    def run_until_drained(self) -> Dict[int, ProgramRequest]:
+        """Serve everything in flight; returns rid -> finished request."""
+        self.scheduler.drain()
+        with self._lock:
+            inflight = list(self._inflight.items())
+        for rid, req in inflight:            # blocks outside the lock
+            req.result = req.ticket.result()
+        with self._lock:
+            for rid, req in inflight:
+                self._done[rid] = req
+                self._inflight.pop(rid, None)
+            while len(self._done) > self.keep_done:
+                self._done.popitem(last=False)
+            return dict(self._done)      # snapshot, not the internal dict
+
+    def latency_stats(self, last: Optional[int] = None) -> Dict[str, float]:
+        """Mean/p50/p95 request latency (seconds) over finished requests
+        (the ``last`` most recent ones when given — e.g. one replay)."""
+        with self._lock:
+            reqs = [self._done[rid] for rid in sorted(self._done)]
+        if not reqs:
+            return {"mean": 0.0, "p50": 0.0, "p95": 0.0}
+        if last is not None:
+            reqs = reqs[-last:]
+        lats = np.array([r.latency for r in reqs])
+        return {"mean": float(lats.mean()),
+                "p50": float(np.percentile(lats, 50)),
+                "p95": float(np.percentile(lats, 95))}

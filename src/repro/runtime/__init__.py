@@ -1,3 +1,5 @@
-"""Distributed-runtime substrate: health, stragglers, elasticity."""
+"""Runtime substrate: serving scheduler, health, stragglers, elasticity."""
 from .health import (ElasticPlan, HeartbeatMonitor,  # noqa: F401
                      StragglerDetector, plan_elastic_remesh)
+from .scheduler import (MVEScheduler, SchedulerStats,  # noqa: F401
+                        ServeResult, Ticket)

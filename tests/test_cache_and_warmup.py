@@ -1,0 +1,151 @@
+"""Compile-cache observability + AOT warmup paths.
+
+``engine.cache_info()`` counters, program-LRU eviction, and the
+``CompiledProgram.warmup()`` / ``vm.prewarm`` ahead-of-time paths were
+previously exercised only by the benchmarks; these tests pin their
+contracts (ISSUE 3 satellite).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (MVEConfig, cache_info, compile_program, engine,
+                        isa)
+from repro.core import vm as vm_mod
+from repro.core.isa import DType
+from repro.core.patterns import PATTERNS
+from repro.runtime.scheduler import MVEScheduler
+
+CFG = MVEConfig()
+
+
+def _tiny_program(k: int):
+    return [isa.vsetdimc(1), isa.vsetdiml(0, 8),
+            isa.vsetdup(DType.DW, 0, k)]
+
+
+def test_cache_info_hit_miss_counters():
+    engine.clear_cache()
+    base = cache_info()
+    assert (base.program_hits, base.program_misses,
+            base.program_size) == (0, 0, 0)
+    p = _tiny_program(1)
+    a = compile_program(p, CFG)
+    info = cache_info()
+    assert info.program_misses == 1 and info.program_size == 1
+    b = compile_program(list(p), CFG)          # equal program, fresh list
+    assert b is a
+    info = cache_info()
+    assert info.program_hits == 1 and info.program_misses == 1
+    # a different mode is a different cache entry
+    c = compile_program(p, CFG, mode="fused")
+    assert c is not a
+    assert cache_info().program_misses == 2
+
+
+def test_program_lru_eviction(monkeypatch):
+    engine.clear_cache()
+    monkeypatch.setattr(engine, "_CACHE_CAPACITY", 4)
+    cps = [compile_program(_tiny_program(k), CFG) for k in range(6)]
+    info = cache_info()
+    assert info.program_size == 4
+    assert info.program_evictions == 2
+    # oldest entries were evicted: recompiling program 0 is a miss...
+    misses = info.program_misses
+    again = compile_program(_tiny_program(0), CFG)
+    assert again is not cps[0]
+    assert cache_info().program_misses == misses + 1
+    # ...while the most recent entry is still a hit
+    assert compile_program(_tiny_program(5), CFG) is cps[5]
+    # and hot entries are protected: touching program 3 before two new
+    # compiles keeps it resident (LRU order, not FIFO)
+    compile_program(_tiny_program(3), CFG)
+    compile_program(_tiny_program(6), CFG)
+    compile_program(_tiny_program(7), CFG)
+    assert compile_program(_tiny_program(3), CFG) is cps[3]
+
+
+def test_vm_fallback_aliases_fused_entry():
+    """A VM-unsupported program compiled under mode="vm" answers the
+    explicit mode="fused" lookup from the cache (no recompile)."""
+    engine.clear_cache()
+    prog = [isa.vsetdimc(1), isa.vsetdiml(0, 8)]
+    for r in range(vm_mod.N_REGS + 2):
+        prog.append(isa.vsetdup(DType.DW, r, r))
+    a = compile_program(prog, CFG, mode="vm")
+    assert a.mode == "fused"
+    hits = cache_info().program_hits
+    assert compile_program(prog, CFG, mode="fused") is a
+    assert cache_info().program_hits == hits + 1
+
+
+def test_warmup_batch_path_no_new_compiles():
+    """warmup(batch=N) AOT-compiles the vmapped executable in both
+    modes; the following run_batch adds no XLA compilation."""
+    run = PATTERNS["daxpy"]()
+    mems = np.stack([run.memory] * 4)
+    for mode in ("vm", "fused"):
+        cp = compile_program(run.program, CFG, mode=mode)
+        cp.warmup(run.memory.shape[0], batch=4)
+        jit = (vm_mod._executor(cp._vm._signature(run.memory.shape[0]))
+               .batch if mode == "vm" else cp._get_batch_jit())
+        assert jit._aot, "warmup(batch=) must stash an AOT executable"
+        compiles = jit.compiles
+        mem_b, _, _ = cp.run_batch(mems)
+        assert mem_b.shape[0] == 4
+        assert jit.compiles == compiles
+
+
+def test_warmup_nonfloat_dtype_warms_fused_path():
+    """In vm mode, warmup() follows the same dtype routing as run():
+    an int32 image geometry warms the fused executable."""
+    run = PATTERNS["daxpy"]()
+    cp = compile_program(run.program, CFG, mode="vm")
+    before = len(cp._jit._aot)
+    cp.warmup(run.memory.shape[0], dtype=jnp.int32)
+    assert len(cp._jit._aot) == before + 1
+
+
+def test_prewarm_background_thread():
+    """prewarm(block=False) compiles on a daemon thread; after join the
+    default-signature executor serves without further compiles."""
+    t = vm_mod.prewarm(CFG, block=False)
+    assert t is not None
+    t.join(timeout=300)
+    assert not t.is_alive()
+    sig = vm_mod.default_signature(CFG)
+    ex = vm_mod._executor(sig)
+    assert ex.single._aot, "prewarm must stash the AOT executable"
+    compiles = ex.single.compiles
+    run = PATTERNS["daxpy"]()
+    cp = compile_program(run.program, CFG, mode="vm")
+    assert cp._vm._signature(run.memory.shape[0]) == sig
+    cp.run(run.memory)
+    assert ex.single.compiles == compiles
+    # blocking prewarm is idempotent and returns None
+    assert vm_mod.prewarm(CFG) is None
+
+
+def test_vm_cache_counters_flow_into_engine_info():
+    info = cache_info()
+    v = vm_mod.cache_info()
+    assert info.vm_signatures == v.signatures
+    assert info.vm_hits == v.hits
+    assert info.vm_xla_compiles == v.xla_compiles
+
+
+def test_scheduler_shares_program_lru():
+    """Scheduler submissions and fused-tier promotions land in the same
+    program LRU that cache_info() reports."""
+    engine.clear_cache()
+    run = PATTERNS["daxpy"]()
+    sched = MVEScheduler(CFG, promote_after=2)
+    assert sched.cache_info() == cache_info()
+    sched.submit(run.program, run.memory)
+    info = cache_info()
+    assert info.program_misses == 1
+    sched.submit(run.program, run.memory)       # same program: LRU hit
+    assert cache_info().program_hits >= 1
+    sched.drain()                               # promotion compiles fused
+    assert sched.stats.promotions == 1
+    assert cache_info().program_size == 2       # vm entry + fused entry

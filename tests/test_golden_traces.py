@@ -1,0 +1,112 @@
+"""Golden-trace regression suite: the cost model may not drift silently.
+
+Freezes, for every Section-IV pattern, the exact :class:`TraceEvent`
+stream the engine emits and the :class:`Timeline` totals the controller/CB
+model produces from it — plus the ``paper_claims`` Table II latencies and
+Figure 7 rows — under ``tests/data/golden_traces.json``.  Any change to
+addressing resolution, trace emission, or the timing model shows up as an
+exact-value diff here instead of an unexplained shift in the benchmark
+CSVs.
+
+Regenerating after an *intentional* cost-model change:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_golden_traces.py
+
+Float fields round-trip exactly through JSON (shortest-repr), so equality
+is exact, not approximate.
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro.core import MVEConfig, compile_program, cost
+from repro.core.patterns import PATTERNS, run_pattern
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "golden_traces.json"
+REGEN = bool(os.environ.get("REPRO_REGEN_GOLDEN"))
+CFG = MVEConfig()
+
+_TIMELINE_FIELDS = [
+    "total_cycles", "compute_cycles", "data_cycles", "idle_cycles",
+    "scalar_cycles", "issue_cycles", "vector_instructions",
+    "scalar_instructions", "config_instructions", "busy_cb_cycles",
+    "cb_slots", "busy_lane_cycles", "lane_slots",
+]
+
+
+def _event_row(ev) -> list:
+    cb_bits = int(sum(1 << i for i, b in enumerate(ev.cb_mask) if b))
+    return [ev.op.value, ev.dtype.suffix if ev.dtype else None,
+            int(ev.elements), int(ev.segments), int(ev.scalar_count),
+            int(ev.contiguous_run), int(ev.unique_elements),
+            int(ev.lines), cb_bits]
+
+
+def _pattern_entry(name: str) -> dict:
+    run = PATTERNS[name]()
+    _, state = run_pattern(run, CFG, compiled=True)
+    tl = cost.simulate(state.trace, CFG)
+    return {
+        "trace": [_event_row(ev) for ev in state.trace],
+        "timeline": {f: getattr(tl, f) for f in _TIMELINE_FIELDS},
+    }
+
+
+def _claims_entries() -> dict:
+    from benchmarks import paper_claims
+    return {
+        "table2": {name: [us, derived]
+                   for name, us, derived in paper_claims.table2_latencies()},
+        "fig7": {name: [us, derived]
+                 for name, us, derived in paper_claims.fig7_neon()},
+    }
+
+
+def _current() -> dict:
+    out = {"patterns": {n: _pattern_entry(n) for n in sorted(PATTERNS)}}
+    out.update(_claims_entries())
+    return out
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if REGEN:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_current(), indent=1, sort_keys=True))
+    assert GOLDEN.exists(), \
+        "golden file missing - regenerate with REPRO_REGEN_GOLDEN=1"
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_trace_and_timeline_frozen(golden, name):
+    """Exact TraceEvent stream + Timeline totals for every pattern."""
+    want = golden["patterns"][name]
+    got = _pattern_entry(name)
+    assert got["trace"] == want["trace"], f"{name}: trace drifted"
+    assert got["timeline"] == want["timeline"], f"{name}: timeline drifted"
+
+
+def test_table2_frozen(golden):
+    """Table II bit-serial latencies reproduce exactly."""
+    got = _claims_entries()["table2"]
+    assert got == golden["table2"]
+
+
+def test_fig7_frozen(golden):
+    """Figure 7 per-library rows (speedup + energy + breakdown strings)
+    reproduce exactly — including the geomean summary row."""
+    got = _claims_entries()["fig7"]
+    assert got == golden["fig7"]
+
+
+def test_golden_covers_all_patterns(golden):
+    assert sorted(golden["patterns"]) == sorted(PATTERNS)
+    # cb_mask bitmasks must fit the configured CB count
+    for name, entry in golden["patterns"].items():
+        for row in entry["trace"]:
+            assert 0 <= row[-1] < (1 << CFG.num_cbs)
