@@ -1,0 +1,79 @@
+"""Frontend overhead: kernel build + lowering vs cold compile, per pattern.
+
+The tracing frontend (docs/FRONTEND.md) adds work before a program ever
+reaches an executor: tracing the kernel function, liveness register
+allocation, strict validation, operand packing — and then the engine's
+compile walk.  This section measures that pipeline for every Section-IV
+pattern and holds it against the budget in the tracking issue:
+
+    build (trace+regalloc+validate) + walk  <  5% of the cold fused
+    compile (jit trace + XLA) of the same program
+
+so the abstraction stays invisible next to the costs it already pays.
+
+    PYTHONPATH=src python -m benchmarks.run --only frontend
+"""
+from __future__ import annotations
+
+import time
+from typing import Iterable, List, Tuple
+
+from repro.core.engine import CompiledProgram, clear_cache
+from repro.core.machine import MVEConfig
+
+QUICK_SET = ["daxpy", "gemm", "upsample", "reduction"]
+
+
+def _ms(fn, iters: int = 3) -> float:
+    best = float("inf")
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3
+
+
+def frontend_overhead(names: Iterable[str] | None = None,
+                      ) -> List[Tuple[str, float, str]]:
+    from repro.core.patterns import PATTERNS
+
+    cfg = MVEConfig()
+    rows: List[Tuple[str, float, str]] = []
+    total_build = total_walk = total_cold = 0.0
+    for name in (sorted(PATTERNS) if names is None else names):
+        factory = PATTERNS[name]
+        run = factory()
+        # frontend build: trace + regalloc + strict validate + data/pack
+        build_ms = _ms(factory)
+        # engine compile walk alone (shared by fused and VM modes; the
+        # jit trace and XLA compile happen lazily at first run)
+        walk_ms = _ms(lambda: CompiledProgram(run.program, cfg,
+                                              mode="fused"))
+        # cold fused compile: walk + jit trace + XLA compile + first run
+        def cold():
+            clear_cache()
+            CompiledProgram(run.program, cfg, mode="fused").run(run.memory)
+        cold_ms = _ms(cold, iters=1)
+        ratio = (build_ms + walk_ms) / max(cold_ms, 1e-9)
+        total_build += build_ms
+        total_walk += walk_ms
+        total_cold += cold_ms
+        rows.append((f"frontend/{name}", build_ms * 1e3,
+                     f"walk_us={walk_ms * 1e3:.0f};"
+                     f"cold_fused_us={cold_ms * 1e3:.0f};"
+                     f"lower_ratio={ratio:.3f}"))
+    ratio = (total_build + total_walk) / max(total_cold, 1e-9)
+    rows.append(("frontend/total", total_build * 1e3,
+                 f"walk_us={total_walk * 1e3:.0f};"
+                 f"cold_fused_us={total_cold * 1e3:.0f};"
+                 f"lower_ratio={ratio:.3f};budget=0.05"))
+    return rows
+
+
+def frontend_overhead_quick() -> List[Tuple[str, float, str]]:
+    return frontend_overhead(QUICK_SET)
+
+
+if __name__ == "__main__":
+    for row in frontend_overhead():
+        print(",".join(str(c) for c in row))

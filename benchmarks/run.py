@@ -18,12 +18,14 @@ import traceback
 
 from . import paper_claims
 from .engine_bench import engine_vs_interp
+from .frontend_bench import frontend_overhead, frontend_overhead_quick
 from .kernels_bench import kernel_microbench
 from .roofline import roofline_rows
 from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
 
 SECTIONS = {
     "engine": engine_vs_interp,
+    "frontend": frontend_overhead,
     "table2": paper_claims.table2_latencies,
     "fig7": paper_claims.fig7_neon,
     "fig8": paper_claims.fig8_gpu,
@@ -42,6 +44,7 @@ SECTIONS = {
 # sections that understand the reduced-size smoke mode
 _QUICK_SECTIONS = {
     "engine": lambda: engine_vs_interp(iters=1, quick=True),
+    "frontend": frontend_overhead_quick,
     "serving": mve_serving_quick,
 }
 
@@ -79,8 +82,18 @@ def main() -> None:
             print(f"not writing {args.json}: {failures} section(s) failed",
                   file=sys.stderr)
         else:
+            # --only runs merge into the existing file so one section can
+            # be refreshed without dropping the others' recorded rows
+            merged = {}
+            if only:
+                try:
+                    with open(args.json) as f:
+                        merged = json.load(f)
+                except (OSError, ValueError):
+                    merged = {}
+            merged.update(collected)
             with open(args.json, "w") as f:
-                json.dump(collected, f, indent=2)
+                json.dump(merged, f, indent=2)
     if failures:
         sys.exit(1)
 

@@ -1,6 +1,7 @@
 """Section IV's data-parallel patterns, executed and priced.
 
-Runs every Swan-library pattern through the MVE execution engine
+Runs every Swan-library pattern — all of them built with the tracing
+kernel frontend (docs/FRONTEND.md) — through the MVE execution engine
 (docs/ENGINE.md; the default program-as-data VM shares one XLA executable
 across the whole sweep, validating numerics per pattern), prices it on
 the bit-serial engine vs the 1-D RVV lowering, and shows the same

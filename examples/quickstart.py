@@ -1,49 +1,53 @@
-"""Quickstart: the MVE ISA in 60 lines.
+"""Quickstart: an MVE kernel in 30 lines, no registers, no offsets.
 
-Builds the paper's Figure-3 example (a 3D strided load with replication),
-executes it on the functional in-cache machine model (through the
-program-as-data VM by default — docs/ENGINE.md; ISA reference in
-docs/ISA.md), and prices it on the bit-serial engine vs the 1D-RVV
-baseline.
+Builds the paper's Figure-3 example (a 3D strided load with replication)
+with the tracing kernel frontend (docs/FRONTEND.md): named operands,
+a dimension scope, and stride-mode mnemonics instead of hand-assigned
+register numbers and raw base addresses.  The built kernel lowers to the
+standard ISA program (docs/ISA.md), executes through the program-as-data
+VM by default (docs/ENGINE.md), and is priced on the bit-serial engine
+vs the 1D-RVV baseline.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import MVEConfig, MVEInterpreter, cost, isa, rvv
+import repro.frontend as mve
+from repro.core import MVEConfig, cost, rvv
 from repro.core.isa import DType
+from repro.frontend import BCAST, CR, DERIVED, SEQ
 
-# -- an "image": 4 rows of 3 reference pixels (Figure 3's 2D layout) -----
+
+# -- MVE kernel: load 2D refs -> 3D logical register with replication ----
+# PR[w][y][x] = refs[w][x]  : S = (1, 0, CR)   (stride mode 0 replicates)
+@mve.kernel
+def intra_blocks(b, blocks=4, bs=3):
+    refs = b.input("refs", (blocks, bs), DType.F)
+    pred = b.output("pred", (blocks, bs, bs), DType.F)
+    b.width(32)
+    with b.dims(bs, bs, blocks, ld_strides={2: bs}):
+        row = refs.load(SEQ, BCAST, CR)     # each ref row fills a block
+        shifted = row.astype(DType.DW) << 1  # some compute on all lanes
+        b.keep(shifted)
+        pred.store(row, SEQ, DERIVED, DERIVED)
+
+
+k = intra_blocks()
+print("the built kernel (registers assigned by the allocator):")
+print(k.dump())
+print(f"\noperand plan: {k.plan}")
+
 refs = np.arange(12, dtype=np.float64).reshape(4, 3)
-mem = np.zeros(64)
-mem[:12] = refs.ravel()
+out, state = k.run({"refs": refs})
+print("\nblock 0 (row replicated 3x):\n", out["pred"][0])
+assert (out["pred"][0] == refs[0]).all()
 
-# -- MVE program: load 2D -> 3D logical register with replication --------
-# PR[w][y][x] = MEM[w*3 + x]  : S = (1, 0, 3)   (stride mode 0 replicates)
-prog = [
-    isa.vsetwidth(32),
-    isa.vsetdimc(3),
-    isa.vsetdiml(0, 3),      # x: 3 pixels per row
-    isa.vsetdiml(1, 3),      # y: replicate each row down a 3x3 block
-    isa.vsetdiml(2, 4),      # w: 4 blocks
-    isa.vsetldstr(2, 3),
-    isa.vsld(DType.F, 0, 0, 1, 0, 3),
-    isa.vshi(DType.DW, 1, 0, 1),            # some compute on all lanes
-    isa.vsst(DType.F, 0, 16, 1, 2, 2),      # store 3D -> dense
-]
-
-interp = MVEInterpreter(MVEConfig())
-mem_after, state = interp.run(prog, mem)
-
-got = np.asarray(mem_after[16:16 + 36]).reshape(4, 3, 3)
-print("block 0 (row replicated 3x):\n", got[0])
-assert (got[0] == refs[0]).all()
-
-# -- cost: one instruction vs the 1D lowering ----------------------------
-tl = cost.simulate(state.trace, interp.cfg)
-trace_rvv, stats = rvv.compile_to_rvv(prog)
-tl_rvv = cost.simulate(trace_rvv, interp.cfg)
-ms = rvv.mve_stats(prog)
+# -- cost: one multi-dim instruction vs the 1D lowering ------------------
+cfg = MVEConfig()
+tl = cost.simulate(state.trace, cfg)
+trace_rvv, stats = rvv.compile_to_rvv(k.program)
+tl_rvv = cost.simulate(trace_rvv, cfg)
+ms = rvv.mve_stats(k.program)
 
 print(f"\nMVE : {ms.vector_instructions} vector instructions, "
       f"{tl.total_cycles:.0f} cycles")

@@ -39,7 +39,9 @@ def main():
     print("\n== replay 1: cold — VM tier, no per-program XLA compiles ==")
     t0 = time.perf_counter()
     for _, r in stream:
-        server.submit(r.program, r.memory)
+        # frontend kernels submit directly — named operands, no flat
+        # memory image at the call site (docs/FRONTEND.md)
+        server.submit(r.kernel)
     done = server.run_until_drained()
     print(f"served {len(done)} requests in "
           f"{(time.perf_counter() - t0) * 1e3:.0f} ms")
@@ -47,7 +49,7 @@ def main():
     print("\n== replay 2-3: hot programs promoted to fused batches ==")
     for _ in range(2):
         for _, r in stream:
-            server.submit(r.program, r.memory)
+            server.submit(r.kernel)
         t0 = time.perf_counter()
         server.run_until_drained()
         wall = time.perf_counter() - t0
@@ -77,6 +79,10 @@ def main():
         np.testing.assert_array_equal(np.asarray(mem),
                                       req.result.memory)
     print("results bit-identical to per-request execution")
+    first = done[min(done)]
+    name, arr = next(iter(first.result.operands.items()))
+    print(f"named results: request 0 operand {name!r} shape "
+          f"{arr.shape} read back by name")
 
 
 if __name__ == "__main__":

@@ -11,12 +11,33 @@ Layers:
   cost     — BS/BP/BH/AC cycle models + controller/CB timeline
   rvv      — 1D long-vector baseline lowering (Figures 10/11/13)
   patterns — Section IV data-parallel patterns for 12 mobile libraries
+             (built with the kernel frontend, :mod:`repro.frontend`)
   packing  — the MVE lane/masking abstraction reused by the LM framework
+
+Kernels are authored one level up, in :mod:`repro.frontend`
+(docs/FRONTEND.md): a tracing builder over named operands that lowers to
+the ``isa.Program`` IR these modules execute.
 """
-from . import (cost, engine, interp, isa, machine, packing, patterns,  # noqa: F401
+from . import (cost, engine, interp, isa, machine, packing,  # noqa: F401
                rvv, vm)
 from .engine import (CompiledProgram, cache_info,  # noqa: F401
                      compile_program)
 from .interp import MVEInterpreter  # noqa: F401
 from .machine import MVEConfig  # noqa: F401
-from .patterns import run_pattern  # noqa: F401
+
+# ``patterns`` is imported lazily (PEP 562): it builds its programs with
+# the kernel frontend (:mod:`repro.frontend`), which itself imports this
+# package for the ISA — eager import here would be circular.
+_LAZY = {"patterns", "run_pattern"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        patterns = importlib.import_module(".patterns", __name__)
+        return patterns if name == "patterns" else patterns.run_pattern
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _LAZY)

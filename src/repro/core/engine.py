@@ -98,13 +98,27 @@ class _Step:
 
 @dataclasses.dataclass
 class ExecutionResult:
-    """Duck-type compatible with :class:`repro.core.interp.MachineState`."""
+    """Duck-type compatible with :class:`repro.core.interp.MachineState`.
+
+    ``operands`` materialises named, shaped result views lazily when the
+    program was compiled from a frontend kernel (:mod:`repro.frontend`)
+    — reading results by name costs nothing until accessed."""
 
     memory: jnp.ndarray
     regs: Dict[int, jnp.ndarray]
     tag: jnp.ndarray
     ctrl: ControlState
     trace: List[TraceEvent]
+    kernel: Optional[object] = None       # frontend Kernel, if any
+    _operands: Optional[Dict[str, np.ndarray]] = dataclasses.field(
+        default=None, repr=False)
+
+    @property
+    def operands(self) -> Optional[Dict[str, np.ndarray]]:
+        """Results read back by operand name (``None`` for raw programs)."""
+        if self._operands is None and self.kernel is not None:
+            self._operands = self.kernel.unpack(self.memory)
+        return self._operands
 
 
 class CompiledProgram:
@@ -119,8 +133,16 @@ class CompiledProgram:
                  mode: str = "fused"):
         self.cfg = cfg
         self.program = tuple(program)
+        self.kernel = None    # frontend Kernel when compiled from one
+        self._kernels_seen = None      # WeakSet of accepted kernels
+        self._kernel_conflict = False  # distinct kernels share this text
         self.steps: List[_Step] = []
         self.n_random = 0
+        # Build-time checks (readable one-line errors) before the walk:
+        # a malformed program fails here, not deep inside addressing
+        # resolution.  Lenient mode — executors keep accepting programs
+        # that deliberately rely on clip/drop semantics.
+        isa.validate(self.program, wordlines=cfg.wordlines)
         self._compile_walk()
         self._masks = None       # built lazily: only the fused path streams
         self._zeros = None       # the mask stack / power-on register row
@@ -376,6 +398,30 @@ class CompiledProgram:
         exact eager semantics of the per-program fused function."""
         return self.mode == "vm" and self._vm_memory_dtype(memory)
 
+    def _bound_kernel(self):
+        """The kernel whose plan names this program's operands; raises a
+        readable error when there is none or when the binding is
+        ambiguous (several non-equivalent kernels share the text)."""
+        if self.kernel is None:
+            if self._kernel_conflict:
+                raise TypeError(
+                    "this program text was compiled from multiple "
+                    "distinct kernels (different operand plans or init "
+                    "data) — pack explicitly with kernel.pack(...) or "
+                    "execute via kernel.run()/kernel.run_batch()")
+            raise TypeError(
+                "named-operand execution needs a frontend kernel: "
+                "compile with compile_program(kernel) or pass a flat "
+                "memory image")
+        return self.kernel
+
+    def _as_memory(self, memory):
+        """Accept a flat memory image or — when this program was compiled
+        from a frontend kernel — a dict of named operand arrays."""
+        if isinstance(memory, dict):
+            return self._bound_kernel().pack(memory)
+        return memory
+
     def run_async(self, memory):
         """Dispatch one execution without blocking on host results.
 
@@ -384,6 +430,7 @@ class CompiledProgram:
         prepares the next request, so a serving loop
         (:mod:`repro.runtime.scheduler`) pays one sync per drain cycle
         instead of one per request."""
+        memory = self._as_memory(memory)
         if self._use_vm(memory):
             return ("vm", self._vm.run_async(memory))
         masks, zeros = self._fused_operands()
@@ -402,7 +449,7 @@ class CompiledProgram:
         # CompiledProgram is shared through the compile cache.
         state = ExecutionResult(memory=mem, regs=dict(regs), tag=tag,
                                 ctrl=copy.deepcopy(self.final_ctrl),
-                                trace=trace)
+                                trace=trace, kernel=self.kernel)
         return mem, state
 
     def run(self, memory) -> Tuple[jnp.ndarray, ExecutionResult]:
@@ -427,6 +474,8 @@ class CompiledProgram:
     def run_batch_async(self, memories):
         """Dispatch a batched execution without blocking (see
         :meth:`run_async`); finalize with :meth:`finalize_batch`."""
+        if isinstance(memories, dict):
+            memories = self._bound_kernel().pack_batch(memories)
         if self._use_vm(memories):
             return ("vm", self._vm.run_batch_async(memories))
         masks, zeros = self._fused_operands()
@@ -556,10 +605,43 @@ def cache_info() -> EngineCacheInfo:
         vm_hits=v.hits, vm_xla_compiles=v.xla_compiles)
 
 
+def _attach_kernel(cp: CompiledProgram, kernel) -> CompiledProgram:
+    """Bind a frontend kernel to a (shared, cached) compilation.
+
+    Distinct kernels can emit identical program text with *different*
+    operand plans or init data; serving the first kernel's data to the
+    second would be silent corruption.  Equivalent kernels (same plan,
+    same inits) share the binding; a non-equivalent one poisons it, so
+    dict-of-operands execution on this object raises instead of packing
+    the wrong kernel's data (``kernel.run()`` is never ambiguous — it
+    packs with its own plan before dispatch).
+    """
+    if kernel is None or kernel is cp.kernel:
+        return cp
+    import weakref
+    with _CACHE_LOCK:
+        if cp._kernels_seen is None:
+            cp._kernels_seen = weakref.WeakSet()
+        if kernel in cp._kernels_seen:
+            return cp
+        if cp.kernel is None and not cp._kernel_conflict:
+            cp.kernel = kernel
+        elif cp.kernel is not None and not cp.kernel.equivalent(kernel):
+            cp.kernel = None
+            cp._kernel_conflict = True
+        cp._kernels_seen.add(kernel)
+    return cp
+
+
 def compile_program(program: isa.Program,
                     cfg: MVEConfig | None = None,
                     mode: str | None = None) -> CompiledProgram:
     """Compile (with caching) an MVE program for the given machine config.
+
+    Accepts a raw instruction sequence or a frontend
+    :class:`~repro.frontend.Kernel` — for kernels, ``run``/``run_batch``
+    additionally accept a dict of named operand arrays and results are
+    read back by name (``state.operands``).
 
     The returned :class:`CompiledProgram` is memory-image independent: the
     same object executes any number of images (or a vmapped batch) without
@@ -575,13 +657,17 @@ def compile_program(program: isa.Program,
     mode = mode or DEFAULT_MODE
     if mode not in ("vm", "fused"):
         raise ValueError(f"unknown engine mode {mode!r}")
+    kernel = None
+    if hasattr(program, "plan") and hasattr(program, "program"):
+        kernel = program            # a frontend Kernel (duck-typed:
+        program = kernel.program    # no core -> frontend import cycle)
     key = (tuple(program), cfg, mode)
     with _CACHE_LOCK:
         cp = _CACHE.get(key)
         if cp is not None:
             _HITS += 1
             _CACHE.move_to_end(key)
-            return cp
+            return _attach_kernel(cp, kernel)
     # Construct outside the lock: a multi-ms compile walk must not stall
     # concurrent lookups (scheduler submit() runs on many client threads).
     # A racing duplicate construction is possible but harmless — the
@@ -592,9 +678,10 @@ def compile_program(program: isa.Program,
         if cp is not None:
             _HITS += 1
             _CACHE.move_to_end(key)
-            return cp
+            return _attach_kernel(cp, kernel)
         _MISSES += 1
         cp = _CACHE[key] = built
+        _attach_kernel(cp, kernel)
         if cp.mode != mode:
             # VM-unsupported fallback: alias the fused key too, so an
             # explicit mode="fused" request reuses this compilation

@@ -28,7 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import enum
-from typing import Optional, Sequence, Tuple
+from typing import Iterable, Optional, Tuple
 
 MAX_DIMS = 4
 # Paper Section III-E: the highest dimension is capped at 256 so the mask CR
@@ -273,4 +273,274 @@ def scalar(count: int) -> Instr:
     return Instr(Op.SCALAR, scalar_count=count)
 
 
-Program = Sequence[Instr]
+# ---------------------------------------------------------------------------
+# Programs: validation + disassembly.
+#
+# Historically ``Program`` was a bare ``Sequence[Instr]`` type alias; it is
+# now a tuple subclass so programs carry their own build-time checks
+# (:meth:`Program.validate`) and a readable pretty-printer
+# (:meth:`Program.dump`).  Plain lists/tuples of :class:`Instr` remain
+# accepted everywhere — the executors only iterate.
+# ---------------------------------------------------------------------------
+
+class ProgramError(ValueError):
+    """A program failed build-time validation.
+
+    Carries the offending instruction index and its disassembly so the
+    error reads like a compiler diagnostic instead of an opaque failure
+    deep inside the compile walk.
+    """
+
+    def __init__(self, message: str, index: Optional[int] = None,
+                 instr: Optional[Instr] = None):
+        loc = ""
+        if index is not None:
+            loc = f"\n  at [{index:3d}] {disassemble(instr)}" \
+                if instr is not None else f"\n  at instruction {index}"
+        super().__init__(message + loc)
+        self.index = index
+        self.instr = instr
+
+
+def disassemble(instr: Instr) -> str:
+    """One readable line for one instruction (assembly-ish)."""
+    op = instr.op
+    mn = op.value + (f".{instr.dtype.suffix}" if instr.dtype else "")
+    if op is Op.SET_DIMC or op is Op.SET_WIDTH:
+        return f"{mn:14s} {instr.imm}"
+    if op is Op.SET_DIML:
+        return f"{mn:14s} d{instr.dim}, len={instr.length}"
+    if op in (Op.SET_LDSTR, Op.SET_STSTR):
+        return f"{mn:14s} d{instr.dim}, stride={instr.stride}"
+    if op in (Op.SET_MASK, Op.UNSET_MASK):
+        return f"{mn:14s} bit={instr.mask_index}"
+    if op is Op.SCALAR:
+        return f"{mn:14s} x{instr.scalar_count}"
+    pred = ", pred" if instr.predicated else ""
+    if op in (Op.SLD, Op.RLD):
+        kind = "ptrs" if op is Op.RLD else "base"
+        return (f"{mn:14s} v{instr.vd}, [{kind}={instr.base}], "
+                f"S={tuple(instr.modes or ())}{pred}")
+    if op in (Op.SST, Op.RST):
+        kind = "ptrs" if op is Op.RST else "base"
+        return (f"{mn:14s} v{instr.vs1}, [{kind}={instr.base}], "
+                f"S={tuple(instr.modes or ())}{pred}")
+    if op is Op.SET_DUP:
+        return f"{mn:14s} v{instr.vd}, {instr.imm}{pred}"
+    if op in (Op.SHI, Op.ROTI):
+        return f"{mn:14s} v{instr.vd}, v{instr.vs1}, {instr.imm}{pred}"
+    if op in COMPARE_OPS:
+        return f"{mn:14s} v{instr.vs1}, v{instr.vs2}"
+    if op in (Op.CPY, Op.CVT):
+        return f"{mn:14s} v{instr.vd}, v{instr.vs1}{pred}"
+    srcs = [f"v{instr.vs1}"]
+    if instr.vs2 is not None:
+        srcs.append(f"v{instr.vs2}")
+    return f"{mn:14s} v{instr.vd}, {', '.join(srcs)}{pred}"
+
+
+def dump(program: Iterable[Instr]) -> str:
+    """Disassemble a whole program, one numbered line per instruction."""
+    return "\n".join(f"[{i:3d}] {disassemble(instr)}"
+                     for i, instr in enumerate(program))
+
+
+def _require(cond: bool, msg: str, i: int, instr: Instr) -> None:
+    if not cond:
+        raise ProgramError(msg, i, instr)
+
+
+def validate(program: Iterable[Instr], memory_size: Optional[int] = None,
+             strict: bool = False, wordlines: int = 256) -> None:
+    """Build-time program checks; raises :class:`ProgramError`.
+
+    Walks the config-register evolution exactly like the compile walk
+    (:mod:`repro.core.engine`) and checks each instruction against the
+    architectural state it will execute under:
+
+    * structural — operands present, stride modes in ``0..3``, dim/mask
+      indices in range, shifts/rotates on integer registers only;
+    * register bounds — register ids must fit the *variable* register
+      file: ``wordlines // kernel_width`` live PRs (Section III-B);
+    * ``strict`` adds frontend-grade checks: element dtype no wider than
+      the configured register width, dimension-mask bits that can never
+      map onto the current highest dimension, and — when ``memory_size``
+      is given — static address ranges within the memory image.
+
+    The step interpreter, fused engine and VM run the *lenient* subset
+    (``strict=False``) so hand-written programs that deliberately rely on
+    clipping/drop semantics keep executing; the kernel frontend
+    (:mod:`repro.frontend`) validates strictly at build time.
+    """
+    # Late import: machine.py imports this module at load time.
+    from .machine import ControlState, apply_config
+
+    ctrl = ControlState()
+    for i, instr in enumerate(program):
+        op = instr.op
+        if op in CONFIG_OPS:
+            if op is Op.SET_DIMC:
+                _require(instr.imm is not None and
+                         1 <= instr.imm <= MAX_DIMS,
+                         f"dimension count must be in [1,{MAX_DIMS}]",
+                         i, instr)
+            elif op is Op.SET_DIML:
+                _require(instr.dim is not None and
+                         0 <= instr.dim < MAX_DIMS,
+                         f"dimension index must be in [0,{MAX_DIMS})",
+                         i, instr)
+                _require(instr.length is not None and instr.length >= 1,
+                         "dimension length must be >= 1", i, instr)
+            elif op in (Op.SET_LDSTR, Op.SET_STSTR):
+                _require(instr.dim is not None and
+                         0 <= instr.dim < MAX_DIMS,
+                         f"stride CR index must be in [0,{MAX_DIMS})",
+                         i, instr)
+                _require(instr.stride is not None,
+                         "stride CR write needs a stride value", i, instr)
+            elif op in (Op.SET_MASK, Op.UNSET_MASK):
+                _require(instr.mask_index is not None and
+                         0 <= instr.mask_index < MAX_TOP_DIM,
+                         f"mask bit must be in [0,{MAX_TOP_DIM}) — the "
+                         "mask CR covers only the highest dimension",
+                         i, instr)
+                if strict:
+                    top = ctrl.dim_lens[ctrl.dim_count - 1]
+                    _require(instr.mask_index < top,
+                             f"mask bit {instr.mask_index} can never map "
+                             f"onto the highest dimension (top length "
+                             f"{top}) — dimension-level masks apply to "
+                             "the top dimension only", i, instr)
+            elif op is Op.SET_WIDTH:
+                _require(instr.imm is not None and
+                         1 <= instr.imm <= wordlines,
+                         f"register width must be in [1,{wordlines}] bits",
+                         i, instr)
+            apply_config(ctrl, instr)
+            continue
+        if op is Op.SCALAR:
+            _require(instr.scalar_count >= 0,
+                     "scalar count must be >= 0", i, instr)
+            continue
+
+        # ---- vector instructions -------------------------------------
+        _require(instr.dtype is not None,
+                 "vector instruction needs a data type", i, instr)
+        # Lenient: any register id the machine could ever name (the fused
+        # engine hosts programs beyond the current width's physical file —
+        # that is what the VM -> fused fallback exists for).  Strict: the
+        # variable register count of Section III-B.
+        max_regs = wordlines if not strict else \
+            max(1, wordlines // max(ctrl.kernel_width, 1))
+        for field, r in (("vd", instr.vd), ("vs1", instr.vs1),
+                         ("vs2", instr.vs2)):
+            if r is None:
+                continue
+            _require(0 <= r < max_regs,
+                     f"register {field}=v{r} out of range: width "
+                     f"{ctrl.kernel_width} leaves {max_regs} physical "
+                     f"registers ({wordlines} wordlines / width)", i, instr)
+        if strict:
+            _require(instr.dtype.bits <= ctrl.kernel_width,
+                     f"dtype {instr.dtype.name} ({instr.dtype.bits} bits) "
+                     f"is wider than the configured register width "
+                     f"{ctrl.kernel_width}", i, instr)
+
+        if op in MEMORY_OPS:
+            store = op in (Op.SST, Op.RST)
+            _require(instr.base is not None and instr.base >= 0,
+                     "memory access needs a non-negative base address",
+                     i, instr)
+            _require(instr.vs1 is not None if store
+                     else instr.vd is not None,
+                     "store needs a source register" if store
+                     else "load needs a destination register", i, instr)
+            modes = tuple(instr.modes or ())
+            _require(all(0 <= m <= 3 for m in modes),
+                     f"stride modes must be 2-bit (0..3), got {modes}",
+                     i, instr)
+            _require(len(modes) <= MAX_DIMS,
+                     f"at most {MAX_DIMS} stride modes", i, instr)
+            if strict and memory_size is not None:
+                _check_address_range(ctrl, instr, memory_size, i)
+            continue
+
+        if op in COMPARE_OPS:
+            _require(instr.vs1 is not None and instr.vs2 is not None,
+                     "compare needs two source registers", i, instr)
+            continue
+
+        _require(instr.vd is not None,
+                 "instruction needs a destination register", i, instr)
+        if op is Op.SET_DUP:
+            _require(instr.imm is not None,
+                     "vsetdup needs an immediate value", i, instr)
+        elif op in (Op.SHI, Op.ROTI):
+            _require(instr.vs1 is not None and instr.imm is not None,
+                     "shift/rotate needs a source register and an "
+                     "immediate amount", i, instr)
+            _require(not instr.dtype.is_float,
+                     "shift/rotate on a float register", i, instr)
+        elif op is Op.SHR:
+            _require(instr.vs1 is not None and instr.vs2 is not None,
+                     "variable shift needs two source registers", i, instr)
+            _require(not instr.dtype.is_float,
+                     "variable shift on a float register", i, instr)
+        elif op in (Op.CPY, Op.CVT):
+            _require(instr.vs1 is not None,
+                     "move needs a source register", i, instr)
+        else:
+            _require(instr.vs1 is not None and instr.vs2 is not None,
+                     f"{op.value} needs two source registers", i, instr)
+
+
+def _check_address_range(ctrl, instr: Instr, memory_size: int,
+                         i: int) -> None:
+    """Strict mode: the static address envelope must stay in memory.
+
+    For strided accesses the maximum address over active lanes is
+    ``base + sum (len_d - 1) * stride_d``; random-base accesses must at
+    least read their whole pointer array from memory.
+    """
+    store = instr.op in (Op.SST, Op.RST)
+    random = instr.op in (Op.RLD, Op.RST)
+    dims = ctrl.active_dims()
+    strides = ctrl.resolve_strides(tuple(instr.modes or ()), store)
+    if random:
+        end = instr.base + dims[-1]
+        _require(end <= memory_size,
+                 f"pointer array [{instr.base}, {end}) exceeds the "
+                 f"memory image ({memory_size} elements)", i, instr)
+        return
+    lo = instr.base + sum(min(0, (ln - 1) * s)
+                          for ln, s in zip(dims, strides))
+    hi = instr.base + sum(max(0, (ln - 1) * s)
+                          for ln, s in zip(dims, strides))
+    _require(lo >= 0 and hi < memory_size,
+             f"static access spans [{lo}, {hi}] outside the memory "
+             f"image ({memory_size} elements)", i, instr)
+
+
+class Program(tuple):
+    """An MVE program: an immutable sequence of :class:`Instr`.
+
+    Adds :meth:`validate` (build-time checks with readable one-line
+    errors) and :meth:`dump` (disassembler) over plain tuple semantics.
+    Anything iterable of instructions still works wherever a program is
+    accepted; this class is what the kernel frontend emits.
+    """
+
+    __slots__ = ()
+
+    def __new__(cls, instrs: Iterable[Instr] = ()):
+        return super().__new__(cls, tuple(instrs))
+
+    def validate(self, memory_size: Optional[int] = None,
+                 strict: bool = False) -> "Program":
+        """Run :func:`validate`; returns ``self`` for chaining."""
+        validate(self, memory_size=memory_size, strict=strict)
+        return self
+
+    def dump(self) -> str:
+        """Readable disassembly (used by error messages and the docs)."""
+        return dump(self)

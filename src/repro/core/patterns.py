@@ -1,28 +1,35 @@
-"""Common data-parallel patterns of Section IV, as executable MVE programs.
+"""Common data-parallel patterns of Section IV, as frontend-built kernels.
 
 Each pattern models one representative kernel of the 12 Swan libraries
 (Table III).  A pattern supplies:
 
-  * an MVE program (list of :class:`repro.core.isa.Instr`) built with the
-    Section IV idioms (multi-dim strided loads, replication via stride 0,
-    random-base accesses, dimension-level masked reduction),
-  * an initial flat memory image and a correctness check (numpy oracle),
+  * an MVE program built with the *kernel frontend*
+    (:mod:`repro.frontend`, docs/FRONTEND.md): named tensor operands,
+    dimension scopes and operator-overloaded vector handles instead of
+    hand-assigned register numbers and raw base offsets.  The emitted
+    programs are instruction-for-instruction equivalent (modulo the
+    register renaming chosen by the allocator) to the original
+    hand-coded instruction lists, which live on as equivalence
+    references in ``tests/legacy_patterns.py``;
+  * an initial flat memory image and a correctness check (numpy oracle)
+    that reads results back *by operand name*;
   * an analytic workload descriptor for the packed-SIMD (Neon) and GPU
     baseline cost models of Figure 7/8/9.
 
-The RVV baseline trace for the same pattern is obtained by lowering the MVE
-program with :func:`repro.core.rvv.compile_to_rvv`.
+The RVV baseline trace for the same pattern is obtained by lowering the
+MVE program with :func:`repro.core.rvv.compile_to_rvv`.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
 from . import isa
-from .isa import DType, Op
+from .isa import DType
 from .machine import MVEConfig
+from ..frontend import BCAST, CR, DERIVED, SEQ, Kernel, KernelBuilder
 
 LANES = MVEConfig().lanes  # 8192
 
@@ -40,16 +47,29 @@ class PatternRun:
     name: str
     library: str
     dim: str                                  # "1D" / "2D" / "3D" / "4D"
-    program: List[isa.Instr]
+    program: isa.Program
     memory: np.ndarray
     check: Callable[[np.ndarray, object], None]
     neon: NeonWork
     flops: float = 0.0                        # for the GPU model
     copy_bytes: float = 0.0
+    kernel: Optional[Kernel] = None           # the frontend build
+
+    def results(self, mem_after) -> Dict[str, np.ndarray]:
+        """Named result tensors of an executed memory image."""
+        return self.kernel.unpack(mem_after)
 
 
-def _mem(size: int) -> np.ndarray:
-    return np.zeros(size, dtype=np.float64)
+def _pattern(kernel: Kernel, library: str, dim: str,
+             check: Callable[[np.ndarray, object], None], neon: NeonWork,
+             flops: float = 0.0, copy_bytes: float = 0.0,
+             memory: Optional[np.ndarray] = None) -> PatternRun:
+    """Shared PatternRun construction: program + packed memory from one
+    built kernel (``memory`` overrides for pointer tables that need the
+    planner's layout — see ``upsample``)."""
+    return PatternRun(kernel.name, library, dim, kernel.program,
+                      kernel.pack() if memory is None else memory,
+                      check, neon, flops, copy_bytes, kernel=kernel)
 
 
 # ---------------------------------------------------------------------------
@@ -60,31 +80,29 @@ def daxpy(n: int = LANES, seed: int = 0) -> PatternRun:
     rng = np.random.default_rng(seed)
     x = rng.standard_normal(n).astype(np.float32)
     y = rng.standard_normal(n).astype(np.float32)
-    alpha = np.float32(1.5)
-    mem = _mem(2 * n)
-    mem[:n] = x
-    mem[n:2 * n] = y
-    expected = y + alpha * x
+    alpha = 1.5
+    expected = y + np.float32(alpha) * x
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32),
-        isa.vsetdimc(1), isa.vsetdiml(0, n),
-        isa.scalar(4),
-        isa.vsld(DType.F, 0, 0, 1),            # x
-        isa.vsld(DType.F, 1, n, 1),            # y
-        isa.vsetdup(DType.F, 2, 1.5),
-        isa.vmul(DType.F, 3, 0, 2),
-        isa.vadd(DType.F, 1, 1, 3),
-        isa.vsst(DType.F, 1, n, 1),
-    ]
+    b = KernelBuilder("daxpy")
+    xo = b.input("x", (n,), DType.F, init=x)
+    yo = b.inout("y", (n,), DType.F, init=y)
+    b.width(32)
+    with b.dims(n):
+        b.scalar(4)
+        vx = xo.load(SEQ)
+        vy = yo.load(SEQ)
+        vy += alpha * vx
+        yo.store(vy, SEQ)
+    k = b.build()
 
     def check(mem_after, state):
-        np.testing.assert_allclose(mem_after[n:2 * n], expected, rtol=1e-5)
+        np.testing.assert_allclose(k.unpack(mem_after)["y"], expected,
+                                   rtol=1e-5)
 
-    return PatternRun("daxpy", "Linpack", "1D", p, mem, check,
-                      NeonWork(vector_ops=2, elements=n, bits=32,
-                               mem_bytes=3 * 4 * n),
-                      flops=2 * n, copy_bytes=8 * n)
+    return _pattern(k, "Linpack", "1D", check,
+                    NeonWork(vector_ops=2, elements=n, bits=32,
+                             mem_bytes=3 * 4 * n),
+                    flops=2 * n, copy_bytes=8 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -100,49 +118,45 @@ def gemm(n_rows: int = 128, k: int = 16, m: int = 64, seed: int = 1,
     rng = np.random.default_rng(seed)
     if dtype is DType.W:
         a = rng.integers(-8, 8, (n_rows, k)).astype(np.float32)
-        b = rng.integers(-8, 8, (k, m)).astype(np.float32)
+        w = rng.integers(-8, 8, (k, m)).astype(np.float32)
     else:
         a = rng.standard_normal((n_rows, k)).astype(np.float32)
-        b = rng.standard_normal((k, m)).astype(np.float32)
+        w = rng.standard_normal((k, m)).astype(np.float32)
     rows_per_iter = min(lanes // m, n_rows, 256)
-    a_base, b_base, c_base = 0, n_rows * k, n_rows * k + k * m
-    mem = _mem(c_base + n_rows * m)
-    mem[a_base:b_base] = a.ravel()
-    mem[b_base:c_base] = b.ravel()
-    expected = (a @ b).astype(np.float32)
+    expected = (a @ w).astype(np.float32)
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(dtype.bits),
-        isa.vsetdimc(2),
-        isa.vsetdiml(0, m), isa.vsetdiml(1, rows_per_iter),
-        isa.vsetldstr(1, k),       # input column stride
-        isa.vsetststr(1, m),       # output row stride
-    ]
-    for n0 in range(0, n_rows, rows_per_iter):
-        p.append(isa.scalar(6))                       # loop + addressing
-        p.append(isa.vsetdup(dtype, 2, 0))            # acc = 0
-        for kk in range(k):
-            p.append(isa.scalar(4))
-            # input column A[n0:n0+R, kk] replicated horizontally (S0=0)
-            p.append(isa.vsld(dtype, 0, a_base + n0 * k + kk, 0, 3))
-            # weight row B[kk, :] replicated vertically (S1=0)
-            p.append(isa.vsld(dtype, 1, b_base + kk * m, 1, 0))
-            p.append(isa.vmul(dtype, 3, 0, 1))
-            p.append(isa.vadd(dtype, 2, 2, 3))
-        # store R output rows sequentially (S0=1, S1=M via mode 2)
-        p.append(isa.vsst(dtype, 2, c_base + n0 * m, 1, 2))
+    b = KernelBuilder("gemm")
+    ao = b.input("a", (n_rows, k), dtype, init=a)
+    wo = b.input("b", (k, m), dtype, init=w)
+    co = b.output("c", (n_rows, m), dtype)
+    b.width(dtype.bits)
+    # input column stride (CR d1) = K; output row stride (CR d1) = M
+    with b.dims(m, rows_per_iter, ld_strides={1: k}, st_strides={1: m}):
+        for n0 in range(0, n_rows, rows_per_iter):
+            b.scalar(6)                       # loop + addressing
+            acc = b.const(dtype, 0)
+            for kk in range(k):
+                b.scalar(4)
+                # input column A[n0:n0+R, kk] replicated horizontally
+                col = ao.at(n0, kk).load(BCAST, CR)
+                # weight row B[kk, :] replicated vertically
+                row = wo.at(kk, 0).load(SEQ, BCAST)
+                acc += col * row
+            # store R output rows sequentially (S0=1, S1=M via mode 2)
+            co.at(n0, 0).store(acc, SEQ, DERIVED)
+    kern = b.build()
 
     def check(mem_after, state):
-        got = mem_after[c_base:c_base + n_rows * m].reshape(n_rows, m)
+        got = kern.unpack(mem_after)["c"]
         np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-4)
 
     flops = 2.0 * n_rows * k * m
-    return PatternRun("gemm", "XNNPACK", "2D", p, mem, check,
-                      NeonWork(vector_ops=2 * k, elements=n_rows * m, bits=32,
-                               mem_bytes=4.0 * (n_rows * k + k * m +
-                                                n_rows * m)),
-                      flops=flops,
-                      copy_bytes=4.0 * (n_rows * k + k * m + n_rows * m))
+    return _pattern(kern, "XNNPACK", "2D", check,
+                    NeonWork(vector_ops=2 * k, elements=n_rows * m, bits=32,
+                             mem_bytes=4.0 * (n_rows * k + k * m +
+                                              n_rows * m)),
+                    flops=flops,
+                    copy_bytes=4.0 * (n_rows * k + k * m + n_rows * m))
 
 
 # ---------------------------------------------------------------------------
@@ -161,50 +175,48 @@ def spmm(rows: int = 64, cols: int = 64, m: int = 64, density: float = 0.25,
 
     nnz_r, nnz_c = np.nonzero(a)
     nnz_v = a[nnz_r, nnz_c]
-    w_base = 0
-    v_base = w_base + cols * m
-    ptr_base = v_base + len(nnz_v)
-    out_base = ptr_base + len(nnz_v)
-    mem = _mem(out_base + len(nnz_v) * m)   # one partial product row per nnz
-    mem[w_base:v_base] = w.ravel()
-    mem[v_base:ptr_base] = nnz_v
+    group = min(lanes // m, 256)
+
+    b = KernelBuilder("spmm")
+    wo = b.input("w", (cols, m), DType.F, init=w)
+    vo = b.input("values", (len(nnz_v),), DType.F, init=nnz_v)
     # "Core computes the weight row addresses corresponding to non-zero
     # input cells" — the pointer array the random load walks.
-    mem[ptr_base:out_base] = w_base + nnz_c * m
-
-    group = min(lanes // m, 256)
-    p: List[isa.Instr] = [isa.vsetwidth(32)]
-    lane_rows: List[int] = []
+    po = b.input("row_ptrs", (len(nnz_v),), DType.F,
+                 init=wo.addr(nnz_c * m))
+    oo = b.output("partial", (len(nnz_v), m), DType.F)
+    b.width(32)
     i = 0
     while i < len(nnz_v):
         g = min(group, len(nnz_v) - i)
-        p += [isa.scalar(8),
-              isa.vsetdimc(2), isa.vsetdiml(0, m), isa.vsetdiml(1, g)]
-        # nnz values replicated horizontally from a strided load (S0=0,S1=1)
-        p.append(isa.vsld(DType.F, 0, v_base + i, 0, 1))
+        b.scalar(8)
+        b.dims(m, g)
+        # nnz values replicated horizontally from a strided load
+        val = vo.at(i).load(BCAST, SEQ)
         # weight rows from random base pointers, sequential inner dim
-        p.append(isa.vrld(DType.F, 1, ptr_base + i, 1))
-        p.append(isa.vmul(DType.F, 2, 0, 1))
+        wrow = po.at(i).rload(SEQ)
+        prod = val * wrow
         # store partial products; combined on the scalar core per-row
-        p.append(isa.vsst(DType.F, 2, out_base + i * m, 1, 2))
-        p.append(isa.scalar(2 * g))
+        oo.at(i, 0).store(prod, SEQ, DERIVED)
+        b.scalar(2 * g)
         i += g
+    kern = b.build()
 
     def check(mem_after, state):
-        partial = mem_after[out_base:out_base + len(nnz_v) * m]
+        partial = kern.unpack(mem_after)["partial"]
         got = np.zeros((rows, m), dtype=np.float32)
         for j, r in enumerate(nnz_r):
-            got[r] += partial[j * m:(j + 1) * m].astype(np.float32)
+            got[r] += partial[j].astype(np.float32)
         np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-4)
 
     flops = 2.0 * len(nnz_v) * m
-    return PatternRun("spmm", "XNNPACK", "2D", p, mem, check,
-                      NeonWork(vector_ops=2 * density * cols,
-                               elements=rows * m, bits=32,
-                               mem_bytes=4.0 * (len(nnz_v) * (m + 2) +
-                                                rows * m)),
-                      flops=flops,
-                      copy_bytes=4.0 * (cols * m + 2 * len(nnz_v)))
+    return _pattern(kern, "XNNPACK", "2D", check,
+                    NeonWork(vector_ops=2 * density * cols,
+                             elements=rows * m, bits=32,
+                             mem_bytes=4.0 * (len(nnz_v) * (m + 2) +
+                                              rows * m)),
+                    flops=flops,
+                    copy_bytes=4.0 * (cols * m + 2 * len(nnz_v)))
 
 
 # ---------------------------------------------------------------------------
@@ -215,31 +227,28 @@ def fir(n: int = LANES, taps: int = 16, seed: int = 3) -> PatternRun:
     rng = np.random.default_rng(seed)
     x = rng.standard_normal(n + taps).astype(np.float32)
     h = rng.standard_normal(taps).astype(np.float32)
-    mem = _mem(2 * (n + taps))
-    mem[:n + taps] = x
-    out_base = n + taps
     expected = np.stack([x[t:t + n] for t in range(taps)], 0).T @ h
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32), isa.vsetdimc(1), isa.vsetdiml(0, n),
-        isa.vsetdup(DType.F, 2, 0.0),
-    ]
-    for t in range(taps):
-        p += [isa.scalar(3),
-              isa.vsld(DType.F, 0, t, 1),
-              isa.vsetdup(DType.F, 1, float(h[t])),
-              isa.vmul(DType.F, 3, 0, 1),
-              isa.vadd(DType.F, 2, 2, 3)]
-    p.append(isa.vsst(DType.F, 2, out_base, 1))
+    b = KernelBuilder("fir")
+    xo = b.input("x", (n + taps,), DType.F, init=x)
+    yo = b.output("y", (n + taps,), DType.F)
+    b.width(32)
+    with b.dims(n):
+        acc = b.const(DType.F, 0.0)
+        for t in range(taps):
+            b.scalar(3)
+            acc += xo.at(t).load(SEQ) * float(h[t])
+        yo.store(acc, SEQ)
+    k = b.build()
 
     def check(mem_after, state):
-        np.testing.assert_allclose(mem_after[out_base:out_base + n],
+        np.testing.assert_allclose(k.unpack(mem_after)["y"][:n],
                                    expected, rtol=1e-4, atol=1e-4)
 
-    return PatternRun("fir", "CMSIS-DSP", "1D", p, mem, check,
-                      NeonWork(vector_ops=2 * taps, elements=n, bits=32,
-                               mem_bytes=4.0 * (taps * n / 4 + 2 * n)),
-                      flops=2.0 * taps * n, copy_bytes=8.0 * n)
+    return _pattern(k, "CMSIS-DSP", "1D", check,
+                    NeonWork(vector_ops=2 * taps, elements=n, bits=32,
+                             mem_bytes=4.0 * (taps * n / 4 + 2 * n)),
+                    flops=2.0 * taps * n, copy_bytes=8.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -254,39 +263,34 @@ def intra_pred(blocks: int = 256, seed: int = 4) -> PatternRun:
         0, 255, size=(blocks, bs)).astype(np.int32)
     refs2 = np.random.default_rng(seed + 1).integers(
         0, 255, size=(blocks, bs)).astype(np.int32)
-    r1_base, r2_base = 0, blocks * bs
-    out_base = 2 * blocks * bs
-    mem = _mem(out_base + blocks * bs * bs)
-    mem[r1_base:r2_base] = refs.ravel()
-    mem[r2_base:out_base] = refs2.ravel()
     # predicted[b, y, x] = (ref1[b, x] + ref2[b, y]) >> 1  (planar-ish)
     expected = (refs[:, None, :] + refs2[:, :, None]) >> 1
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32),
-        isa.vsetdimc(3),
-        isa.vsetdiml(0, bs), isa.vsetdiml(1, bs), isa.vsetdiml(2, blocks),
-        isa.vsetldstr(2, bs),
-        isa.scalar(6),
+    b = KernelBuilder("intra_pred")
+    r1 = b.input("ref1", (blocks, bs), DType.W, init=refs)
+    r2 = b.input("ref2", (blocks, bs), DType.W, init=refs2)
+    out = b.output("pred", (blocks, bs, bs), DType.W)
+    b.width(32)
+    with b.dims(bs, bs, blocks, ld_strides={2: bs}):
+        b.scalar(6)
         # ref row replicated down the column dim: S = (1, 0, 3)
-        isa.vsld(DType.W, 0, r1_base, 1, 0, 3),
+        row = r1.load(SEQ, BCAST, CR)
         # ref col replicated across the row dim: S = (0, 1, 3)
-        isa.vsld(DType.W, 1, r2_base, 0, 1, 3),
-        isa.vadd(DType.W, 2, 0, 1),
-        isa.vshi(DType.W, 2, 2, -1),
-        isa.vsst(DType.W, 2, out_base, 1, 2, 2),
-    ]
+        col = r2.load(BCAST, SEQ, CR)
+        pred = row + col
+        pred >>= 1
+        out.store(pred, SEQ, DERIVED, DERIVED)
+    k = b.build()
 
     def check(mem_after, state):
-        got = mem_after[out_base:out_base + blocks * bs * bs].reshape(
-            blocks, bs, bs).astype(np.int64)
+        got = k.unpack(mem_after)["pred"].astype(np.int64)
         np.testing.assert_array_equal(got, expected)
 
     n = blocks * bs * bs
-    return PatternRun("intra_pred", "Kvazaar", "3D", p, mem, check,
-                      NeonWork(vector_ops=3, elements=n, bits=16,
-                               mem_bytes=4.0 * (2 * blocks * bs + n)),
-                      flops=2.0 * n, copy_bytes=4.0 * n)
+    return _pattern(k, "Kvazaar", "3D", check,
+                    NeonWork(vector_ops=3, elements=n, bits=16,
+                             mem_bytes=4.0 * (2 * blocks * bs + n)),
+                    flops=2.0 * n, copy_bytes=4.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -300,48 +304,47 @@ def upsample(rows: int = 32, m: int = 128, seed: int = 5) -> PatternRun:
     img = rng.integers(0, 255, size=(rows, m)).astype(np.int32)
     # rows live at "random" (shuffled) locations, like libjpeg row pointers
     row_order = rng.permutation(rows)
-    in_base = 0
     mem_rows = np.zeros(rows * m)
-    row_addr = np.zeros(rows, dtype=np.int64)
+    slot_of = np.zeros(rows, dtype=np.int64)
     for slot, r in enumerate(row_order):
         mem_rows[slot * m:(slot + 1) * m] = img[r]
-        row_addr[r] = in_base + slot * m
-    in_ptr_base = rows * m
-    out_ptr_base = in_ptr_base + 2 * rows
-    out_base = out_ptr_base + 2 * rows
-    mem = _mem(out_base + 2 * rows * 2 * m)
-    mem[:rows * m] = mem_rows
-    # input pointer per *output* row (each input row appears twice)
-    in_ptrs = np.repeat(row_addr, 2)
-    out_ptrs = out_base + np.arange(2 * rows) * (2 * m)
-    mem[in_ptr_base:in_ptr_base + 2 * rows] = in_ptrs
-    mem[out_ptr_base:out_ptr_base + 2 * rows] = out_ptrs
+        slot_of[r] = slot * m
     expected = np.repeat(np.repeat(img, 2, axis=0), 2, axis=1)
 
     group = max(1, min(LANES // (2 * m), 2 * rows, 256))
-    p: List[isa.Instr] = [isa.vsetwidth(32)]
+    b = KernelBuilder("upsample")
+    ro = b.input("rows", (rows, m), DType.B, init=mem_rows)
+    # input pointer per *output* row (each input row appears twice);
+    # pointer operands carry the dtype of the data they point at
+    ip = b.input("in_ptrs", (2 * rows,), DType.B,
+                 init=ro.addr(np.repeat(slot_of, 2)))
+    op_ = b.input("out_ptrs", (2 * rows,), DType.B)
+    out = b.output("out", (2 * rows, 2 * m), DType.B)
+    b.width(32)
     for n0 in range(0, 2 * rows, group):
         g = min(group, 2 * rows - n0)
-        p += [isa.scalar(6),
-              isa.vsetdimc(3),
-              isa.vsetdiml(0, 2), isa.vsetdiml(1, m), isa.vsetdiml(2, g),
-              # load: replicate 2x (S0=0), pixels sequential (S1=1),
-              # random row base from the pointer array
-              isa.vrld(DType.B, 0, in_ptr_base + n0, 0, 1),
-              # store: sequential (S0=1), row-major (S1=2 -> derived 2),
-              # random output row base
-              isa.vrst(DType.B, 0, out_ptr_base + n0, 1, 2)]
+        b.scalar(6)
+        b.dims(2, m, g)
+        # load: replicate 2x (S0=0), pixels sequential (S1=1),
+        # random row base from the pointer array
+        px = ip.at(n0).rload(BCAST, SEQ)
+        # store: sequential (S0=1), row-major (S1=2 -> derived 2),
+        # random output row base
+        op_.at(n0).rstore(px, SEQ, DERIVED)
+    k = b.build()
+    # the output-row pointer table points into the planner-assigned
+    # "out" region — fill it through pack() overrides
+    memory = k.pack({"out_ptrs": out.addr(np.arange(2 * rows) * (2 * m))})
 
     def check(mem_after, state):
-        got = mem_after[out_base:out_base + 2 * rows * 2 * m].reshape(
-            2 * rows, 2 * m).astype(np.int64)
+        got = k.unpack(mem_after)["out"].astype(np.int64)
         np.testing.assert_array_equal(got, expected)
 
     n = rows * m
-    return PatternRun("upsample", "libjpeg", "4D", p, mem, check,
-                      NeonWork(vector_ops=3, elements=4 * n, bits=8,
-                               mem_bytes=5.0 * n),
-                      flops=4.0 * n, copy_bytes=5.0 * n)
+    return _pattern(k, "libjpeg", "4D", check,
+                    NeonWork(vector_ops=3, elements=4 * n, bits=8,
+                             mem_bytes=5.0 * n),
+                    flops=4.0 * n, copy_bytes=5.0 * n, memory=memory)
 
 
 # ---------------------------------------------------------------------------
@@ -352,38 +355,37 @@ def png_up(rows: int = 64, width: int = 128, seed: int = 6) -> PatternRun:
     rng = np.random.default_rng(seed)
     raw = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
     prior = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
-    raw_base, prior_base = 0, rows * width
-    rp_base = 2 * rows * width
-    pp_base = rp_base + rows
-    out_base = pp_base + rows
-    mem = _mem(out_base + rows * width)
-    mem[raw_base:prior_base] = raw.ravel()
-    mem[prior_base:rp_base] = prior.ravel()
-    mem[rp_base:rp_base + rows] = raw_base + np.arange(rows) * width
-    mem[pp_base:pp_base + rows] = prior_base + np.arange(rows) * width
     expected = (raw + prior) & 0xFF
 
     group = max(1, min(LANES // width, rows, 256))
-    p: List[isa.Instr] = [isa.vsetwidth(32)]
+    b = KernelBuilder("png_up")
+    ro = b.input("raw", (rows, width), DType.B, init=raw)
+    po = b.input("prior", (rows, width), DType.B, init=prior)
+    rp = b.input("raw_ptrs", (rows,), DType.B,
+                 init=ro.addr(np.arange(rows) * width))
+    pp = b.input("prior_ptrs", (rows,), DType.B,
+                 init=po.addr(np.arange(rows) * width))
+    out = b.output("out", (rows, width), DType.B)
+    b.width(32)
     for r0 in range(0, rows, group):
         g = min(group, rows - r0)
-        p += [isa.scalar(5),
-              isa.vsetdimc(2), isa.vsetdiml(0, width), isa.vsetdiml(1, g),
-              isa.vrld(DType.B, 0, rp_base + r0, 1),
-              isa.vrld(DType.B, 1, pp_base + r0, 1),
-              isa.vadd(DType.B, 2, 0, 1),        # uint8 wrap == & 0xFF
-              isa.vsst(DType.B, 2, out_base + r0 * width, 1, 2)]
+        b.scalar(5)
+        b.dims(width, g)
+        vr = rp.at(r0).rload(SEQ)
+        vp = pp.at(r0).rload(SEQ)
+        s = vr + vp                        # uint8 wrap == & 0xFF
+        out.at(r0, 0).store(s, SEQ, DERIVED)
+    k = b.build()
 
     def check(mem_after, state):
-        got = mem_after[out_base:out_base + rows * width].reshape(
-            rows, width).astype(np.int64)
+        got = k.unpack(mem_after)["out"].astype(np.int64)
         np.testing.assert_array_equal(got, expected)
 
     n = rows * width
-    return PatternRun("png_up", "libpng", "2D", p, mem, check,
-                      NeonWork(vector_ops=3, elements=n, bits=8,
-                               mem_bytes=3.0 * n),
-                      flops=float(n), copy_bytes=3.0 * n)
+    return _pattern(k, "libpng", "2D", check,
+                    NeonWork(vector_ops=3, elements=n, bits=8,
+                             mem_bytes=3.0 * n),
+                    flops=float(n), copy_bytes=3.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -393,35 +395,34 @@ def png_up(rows: int = 64, width: int = 128, seed: int = 6) -> PatternRun:
 def rgb2gray(pixels: int = LANES, seed: int = 7) -> PatternRun:
     rng = np.random.default_rng(seed)
     rgb = rng.integers(0, 255, size=(pixels, 3)).astype(np.int32)
-    in_base, out_base = 0, 3 * pixels
-    mem = _mem(out_base + pixels)
-    mem[:3 * pixels] = rgb.ravel()
     expected = (5 * rgb[:, 0] + 9 * rgb[:, 1] + 2 * rgb[:, 2]) >> 4
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(16), isa.vsetdimc(1), isa.vsetdiml(0, pixels),
-        isa.vsetldstr(0, 3),
-        isa.scalar(4),
-        isa.vsld(DType.W, 0, in_base + 0, 3),     # R, stride 3
-        isa.vsld(DType.W, 1, in_base + 1, 3),     # G
-        isa.vsld(DType.W, 2, in_base + 2, 3),     # B
-        isa.vsetdup(DType.W, 3, 5), isa.vmul(DType.W, 0, 0, 3),
-        isa.vsetdup(DType.W, 3, 9), isa.vmul(DType.W, 1, 1, 3),
-        isa.vsetdup(DType.W, 3, 2), isa.vmul(DType.W, 2, 2, 3),
-        isa.vadd(DType.W, 0, 0, 1),
-        isa.vadd(DType.W, 0, 0, 2),
-        isa.vshi(DType.W, 0, 0, -4),
-        isa.vsst(DType.W, 0, out_base, 1),
-    ]
+    b = KernelBuilder("rgb2gray")
+    px = b.input("rgb", (pixels, 3), DType.W, init=rgb)
+    out = b.output("gray", (pixels,), DType.W)
+    b.width(16)
+    with b.dims(pixels, ld_strides={0: 3}):
+        b.scalar(4)
+        r = px.at(0, 0).load(CR)           # R, stride 3
+        g = px.at(0, 1).load(CR)           # G
+        bl = px.at(0, 2).load(CR)          # B
+        r *= 5
+        g *= 9
+        bl *= 2
+        r += g
+        r += bl
+        r >>= 4
+        out.store(r, SEQ)
+    k = b.build()
 
     def check(mem_after, state):
-        got = mem_after[out_base:out_base + pixels].astype(np.int64)
+        got = k.unpack(mem_after)["gray"].astype(np.int64)
         np.testing.assert_array_equal(got, expected)
 
-    return PatternRun("rgb2gray", "libwebp", "1D", p, mem, check,
-                      NeonWork(vector_ops=10, elements=pixels, bits=16,
-                               mem_bytes=4.0 * pixels),
-                      flops=6.0 * pixels, copy_bytes=4.0 * pixels)
+    return _pattern(k, "libwebp", "1D", check,
+                    NeonWork(vector_ops=10, elements=pixels, bits=16,
+                             mem_bytes=4.0 * pixels),
+                    flops=6.0 * pixels, copy_bytes=4.0 * pixels)
 
 
 # ---------------------------------------------------------------------------
@@ -434,36 +435,33 @@ def alpha_blend(rows: int = 64, width: int = 128, seed: int = 8
     src = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
     dst = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
     alpha = 6                        # 4-bit alpha: 6/16 src + 10/16 dst
-    s_base, d_base = 0, rows * width
-    mem = _mem(2 * rows * width)
-    mem[s_base:d_base] = src.ravel()
-    mem[d_base:] = dst.ravel()
     expected = (src * alpha + dst * (16 - alpha)) >> 4
 
+    b = KernelBuilder("alpha_blend")
+    so = b.input("src", (rows, width), DType.W, init=src)
+    do = b.inout("dst", (rows, width), DType.W, init=dst)
+    b.width(32)
+    with b.dims(width, rows):
+        b.scalar(4)
+        s = so.load(SEQ, DERIVED)
+        d = do.load(SEQ, DERIVED)
+        s *= alpha
+        d *= 16 - alpha
+        s += d
+        s >>= 4
+        do.store(s, SEQ, DERIVED)
+    k = b.build()
+
     n = rows * width
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32),
-        isa.vsetdimc(2), isa.vsetdiml(0, width), isa.vsetdiml(1, rows),
-        isa.scalar(4),
-        isa.vsld(DType.W, 0, s_base, 1, 2),
-        isa.vsld(DType.W, 1, d_base, 1, 2),
-        isa.vsetdup(DType.W, 2, alpha),
-        isa.vmul(DType.W, 0, 0, 2),
-        isa.vsetdup(DType.W, 2, 16 - alpha),
-        isa.vmul(DType.W, 1, 1, 2),
-        isa.vadd(DType.W, 0, 0, 1),
-        isa.vshi(DType.W, 0, 0, -4),
-        isa.vsst(DType.W, 0, d_base, 1, 2),
-    ]
 
     def check(mem_after, state):
-        got = mem_after[d_base:d_base + n].reshape(rows, width)
-        np.testing.assert_array_equal(got.astype(np.int64), expected)
+        got = k.unpack(mem_after)["dst"].astype(np.int64)
+        np.testing.assert_array_equal(got, expected)
 
-    return PatternRun("alpha_blend", "Skia", "2D", p, mem, check,
-                      NeonWork(vector_ops=8, elements=n, bits=8,
-                               mem_bytes=3.0 * n),
-                      flops=4.0 * n, copy_bytes=3.0 * n)
+    return _pattern(k, "Skia", "2D", check,
+                    NeonWork(vector_ops=8, elements=n, bits=8,
+                             mem_bytes=3.0 * n),
+                    flops=4.0 * n, copy_bytes=3.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -476,36 +474,34 @@ def audio_mix(chunks: int = 16, channels: int = 4, samples: int = 128,
     example of limited 1D DLP (Section I: webaudio exposes only 128)."""
     rng = np.random.default_rng(seed)
     a = rng.standard_normal((chunks, channels, samples)).astype(np.float32)
-    b = rng.standard_normal((chunks, channels, samples)).astype(np.float32)
-    gain = np.float32(0.7)
-    n = chunks * channels * samples
-    mem = _mem(3 * n)
-    mem[:n] = a.ravel()
-    mem[n:2 * n] = b.ravel()
-    expected = (a + b) * gain
+    c = rng.standard_normal((chunks, channels, samples)).astype(np.float32)
+    gain = 0.7
+    expected = (a + c) * np.float32(gain)
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32),
-        isa.vsetdimc(3),
-        isa.vsetdiml(0, samples), isa.vsetdiml(1, channels),
-        isa.vsetdiml(2, chunks),
-        isa.scalar(5),
-        isa.vsld(DType.F, 0, 0, 1, 2, 2),
-        isa.vsld(DType.F, 1, n, 1, 2, 2),
-        isa.vadd(DType.F, 0, 0, 1),
-        isa.vsetdup(DType.F, 2, 0.7),
-        isa.vmul(DType.F, 0, 0, 2),
-        isa.vsst(DType.F, 0, 2 * n, 1, 2, 2),
-    ]
+    b = KernelBuilder("audio_mix")
+    ao = b.input("a", (chunks, channels, samples), DType.F, init=a)
+    bo = b.input("b", (chunks, channels, samples), DType.F, init=c)
+    out = b.output("out", (chunks, channels, samples), DType.F)
+    b.width(32)
+    with b.dims(samples, channels, chunks):
+        b.scalar(5)
+        va = ao.load(SEQ, DERIVED, DERIVED)
+        vb = bo.load(SEQ, DERIVED, DERIVED)
+        va += vb
+        b.keep(vb)          # the mixer holds the second input resident
+        va *= gain
+        out.store(va, SEQ, DERIVED, DERIVED)
+    k = b.build()
 
     def check(mem_after, state):
-        got = mem_after[2 * n:3 * n].reshape(chunks, channels, samples)
+        got = k.unpack(mem_after)["out"]
         np.testing.assert_allclose(got, expected, rtol=1e-5)
 
-    return PatternRun("audio_mix", "webaudio", "3D", p, mem, check,
-                      NeonWork(vector_ops=2, elements=n, bits=32,
-                               mem_bytes=12.0 * n),
-                      flops=2.0 * n, copy_bytes=12.0 * n)
+    n = chunks * channels * samples
+    return _pattern(k, "webaudio", "3D", check,
+                    NeonWork(vector_ops=2, elements=n, bits=32,
+                             mem_bytes=12.0 * n),
+                    flops=2.0 * n, copy_bytes=12.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -516,47 +512,42 @@ def reduction(n: int = LANES, seed: int = 10, floor: int = 256
               ) -> PatternRun:
     rng = np.random.default_rng(seed)
     x = rng.integers(0, 255, size=n).astype(np.int64)
-    in_base = 0
-    tmp_base = n
-    out_base = n + n // 2
-    mem = _mem(out_base + floor)
-    mem[:n] = x
     expected_sum = int(x.sum())
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32),
-        isa.vsetdimc(1), isa.vsetdiml(0, n),
-        isa.scalar(3),
-        isa.vsld(DType.DW, 0, in_base, 1),
-    ]
+    b = KernelBuilder("reduction")
+    xo = b.input("x", (n,), DType.DW, init=x)
+    tmp = b.scratch("tmp", (n // 2,), DType.DW)
+    out = b.output("partial", (floor,), DType.DW)
+    b.width(32)
+    b.dims(n)
+    b.scalar(3)
+    acc = xo.load(SEQ)
     m = n
     while m > floor:
         half = m // 2
-        p += [
-            isa.scalar(4),
-            # Split M lanes into 2 halves along a fresh highest dim and
-            # mask off the first one (Section IV reduction snippet).
-            isa.vsetdimc(2), isa.vsetdiml(0, half), isa.vsetdiml(1, 2),
-            isa.vunsetmask(0),
-            isa.vsst(DType.DW, 0, tmp_base - half, 1, 2),
-            isa.vsetmask(0),
-            isa.vsetdimc(1), isa.vsetdiml(0, half),
-            isa.vsld(DType.DW, 1, tmp_base, 1),
-            isa.vadd(DType.DW, 0, 0, 1),
-        ]
+        b.scalar(4)
+        # Split M lanes into 2 halves along a fresh highest dim and
+        # mask off the first one (Section IV reduction snippet): the
+        # unmasked half lands at the start of the scratch region.
+        b.dims(half, 2)
+        with b.masked_off(0):
+            xo.at(n - half).store(acc, SEQ, DERIVED)
+        b.dims(half)
+        acc += tmp.load(SEQ)
         m = half
-    p += [isa.vsetdimc(1), isa.vsetdiml(0, floor),
-          isa.vsst(DType.DW, 0, out_base, 1),
-          isa.scalar(floor)]          # final scalar-core reduction
+    b.dims(floor)
+    out.store(acc, SEQ)
+    b.scalar(floor)          # final scalar-core reduction
+    k = b.build()
 
     def check(mem_after, state):
-        got = int(mem_after[out_base:out_base + floor].sum())
+        got = int(k.unpack(mem_after)["partial"].sum())
         assert got == expected_sum, (got, expected_sum)
 
-    return PatternRun("reduction", "zlib", "1D", p, mem, check,
-                      NeonWork(vector_ops=2, elements=n, bits=32,
-                               mem_bytes=4.0 * n),
-                      flops=float(n), copy_bytes=4.0 * n)
+    return _pattern(k, "zlib", "1D", check,
+                    NeonWork(vector_ops=2, elements=n, bits=32,
+                             mem_bytes=4.0 * n),
+                    flops=float(n), copy_bytes=4.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -568,32 +559,30 @@ def xor_cipher(blocks: int = 256, key_len: int = 32, seed: int = 11
     rng = np.random.default_rng(seed)
     pt = rng.integers(0, 255, size=(blocks, key_len)).astype(np.int64)
     key = rng.integers(0, 255, size=key_len).astype(np.int64)
-    n = blocks * key_len
-    p_base, k_base, c_base = 0, n, n + key_len
-    mem = _mem(c_base + n)
-    mem[p_base:n] = pt.ravel()
-    mem[k_base:k_base + key_len] = key
     expected = pt ^ key[None, :]
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(8),
-        isa.vsetdimc(2), isa.vsetdiml(0, key_len), isa.vsetdiml(1, blocks),
-        isa.scalar(4),
-        isa.vsld(DType.B, 0, p_base, 1, 2),
-        isa.vsld(DType.B, 1, k_base, 1, 0),       # key replicated (S1=0)
-        isa.vxor(DType.B, 2, 0, 1),
-        isa.vsst(DType.B, 2, c_base, 1, 2),
-    ]
+    b = KernelBuilder("xor_cipher")
+    po = b.input("plaintext", (blocks, key_len), DType.B, init=pt)
+    ko = b.input("key", (key_len,), DType.B, init=key)
+    co = b.output("ciphertext", (blocks, key_len), DType.B)
+    b.width(8)
+    with b.dims(key_len, blocks):
+        b.scalar(4)
+        vp = po.load(SEQ, DERIVED)
+        vk = ko.load(SEQ, BCAST)          # key replicated (S1=0)
+        co.store(vp ^ vk, SEQ, DERIVED)
+    k = b.build()
+
+    n = blocks * key_len
 
     def check(mem_after, state):
-        got = mem_after[c_base:c_base + n].reshape(blocks, key_len)
-        np.testing.assert_array_equal(
-            got.astype(np.int64) & 0xFF, expected)
+        got = k.unpack(mem_after)["ciphertext"].astype(np.int64)
+        np.testing.assert_array_equal(got & 0xFF, expected)
 
-    return PatternRun("xor_cipher", "boringssl", "2D", p, mem, check,
-                      NeonWork(vector_ops=1, elements=n, bits=8,
-                               mem_bytes=2.0 * n),
-                      flops=float(n), copy_bytes=2.0 * n)
+    return _pattern(k, "boringssl", "2D", check,
+                    NeonWork(vector_ops=1, elements=n, bits=8,
+                             mem_bytes=2.0 * n),
+                    flops=float(n), copy_bytes=2.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -603,24 +592,24 @@ def xor_cipher(blocks: int = 256, key_len: int = 32, seed: int = 11
 def memcpy(n: int = LANES, seed: int = 12) -> PatternRun:
     rng = np.random.default_rng(seed)
     src = rng.integers(0, 255, size=n).astype(np.int64)
-    mem = _mem(2 * n)
-    mem[:n] = src
 
-    p: List[isa.Instr] = [
-        isa.vsetwidth(8), isa.vsetdimc(1), isa.vsetdiml(0, n),
-        isa.scalar(2),
-        isa.vsld(DType.B, 0, 0, 1),
-        isa.vsst(DType.B, 0, n, 1),
-    ]
+    b = KernelBuilder("memcpy")
+    so = b.input("src", (n,), DType.B, init=src)
+    do = b.output("dst", (n,), DType.B)
+    b.width(8)
+    with b.dims(n):
+        b.scalar(2)
+        do.store(so.load(SEQ), SEQ)
+    k = b.build()
 
     def check(mem_after, state):
-        np.testing.assert_array_equal(
-            mem_after[n:2 * n].astype(np.int64) & 0xFF, src)
+        got = k.unpack(mem_after)["dst"].astype(np.int64)
+        np.testing.assert_array_equal(got & 0xFF, src)
 
-    return PatternRun("memcpy", "ArmRoutines", "1D", p, mem, check,
-                      NeonWork(vector_ops=0.5, elements=n, bits=8,
-                               mem_bytes=2.0 * n),
-                      flops=0.0, copy_bytes=2.0 * n)
+    return _pattern(k, "ArmRoutines", "1D", check,
+                    NeonWork(vector_ops=0.5, elements=n, bits=8,
+                             mem_bytes=2.0 * n),
+                    flops=0.0, copy_bytes=2.0 * n)
 
 
 # ---------------------------------------------------------------------------
@@ -630,35 +619,33 @@ def memcpy(n: int = LANES, seed: int = 12) -> PatternRun:
 def transpose(m: int = 512, n: int = 49, seed: int = 13) -> PatternRun:
     rng = np.random.default_rng(seed)
     a = rng.standard_normal((m, n)).astype(np.float32)
-    in_base, out_base = 0, m * n
-    mem = _mem(2 * m * n)
-    mem[:m * n] = a.ravel()
     expected = a.T.copy()
 
     cols_per_iter = max(1, min(LANES // m, 256))
-    p: List[isa.Instr] = [
-        isa.vsetwidth(32),
-        isa.vsetdimc(2), isa.vsetdiml(0, m), isa.vsetdiml(1, cols_per_iter),
-        isa.vsetldstr(0, n), isa.vsetststr(1, m),
-    ]
-    for i in range(0, n, cols_per_iter):
-        c = min(cols_per_iter, n - i)
-        if c != cols_per_iter:
-            p.append(isa.vsetdiml(1, c))
-        p += [isa.scalar(4),
-              # load c columns: element (y,x) <- input[x, i+y]
-              isa.vsld(DType.F, 0, in_base + i, 3, 1),
-              # store c rows of output: element (y,x) -> output[i+y, x]
-              isa.vsst(DType.F, 0, out_base + i * m, 1, 3)]
+    b = KernelBuilder("transpose")
+    ao = b.input("a", (m, n), DType.F, init=a)
+    out = b.output("out", (n, m), DType.F)
+    b.width(32)
+    with b.dims(m, cols_per_iter, ld_strides={0: n}, st_strides={1: m}):
+        for i in range(0, n, cols_per_iter):
+            c = min(cols_per_iter, n - i)
+            if c != cols_per_iter:
+                b.dim_length(1, c)
+            b.scalar(4)
+            # load c columns: element (y,x) <- input[x, i+y]
+            v = ao.at(0, i).load(CR, SEQ)
+            # store c rows of output: element (y,x) -> output[i+y, x]
+            out.at(i, 0).store(v, SEQ, CR)
+    k = b.build()
 
     def check(mem_after, state):
-        got = mem_after[out_base:out_base + n * m].reshape(n, m)
+        got = k.unpack(mem_after)["out"]
         np.testing.assert_allclose(got, expected, rtol=1e-6)
 
-    return PatternRun("transpose", "XNNPACK", "2D", p, mem, check,
-                      NeonWork(vector_ops=1.5, elements=m * n, bits=32,
-                               mem_bytes=8.0 * m * n),
-                      flops=0.0, copy_bytes=8.0 * m * n)
+    return _pattern(k, "XNNPACK", "2D", check,
+                    NeonWork(vector_ops=1.5, elements=m * n, bits=32,
+                             mem_bytes=8.0 * m * n),
+                    flops=0.0, copy_bytes=8.0 * m * n)
 
 
 # ---------------------------------------------------------------------------
@@ -752,7 +739,8 @@ def run_pattern_batch(name: str, seeds: Sequence[int],
     cfg = cfg or MVEConfig()
     from .engine import compile_program
     runs = [PATTERNS[name](seed=s, **kw) for s in seeds]
-    same_prog = all(r.program == runs[0].program for r in runs[1:])
+    same_prog = all(tuple(r.program) == tuple(runs[0].program)
+                    for r in runs[1:])
     same_size = all(r.memory.shape == runs[0].memory.shape
                     for r in runs[1:])
     if same_prog and same_size:

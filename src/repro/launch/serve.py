@@ -211,12 +211,16 @@ class MVEProgramServer:
         self._inflight: "OrderedDict[int, ProgramRequest]" = OrderedDict()
         self._done: "OrderedDict[int, ProgramRequest]" = OrderedDict()
 
-    def submit(self, program, memory) -> ProgramRequest:
+    def submit(self, program, memory=None) -> ProgramRequest:
+        """Accepts a raw ``(program, memory)`` pair or a frontend
+        :class:`~repro.frontend.Kernel` plus named operand arrays — the
+        same overloads as :meth:`MVEScheduler.submit`; kernel requests
+        read results back by name (``req.result.operands``)."""
         ticket = self.scheduler.submit(program, memory)
         with self._lock:
             req = ProgramRequest(rid=self._next_rid,
-                                 program=tuple(program), memory=memory,
-                                 ticket=ticket)
+                                 program=ticket.program,
+                                 memory=ticket.memory, ticket=ticket)
             self._next_rid += 1
             self._inflight[req.rid] = req
         return req

@@ -79,12 +79,13 @@ class ServeResult:
     """
 
     __slots__ = ("memory", "regs", "tag", "batch_size", "tier",
-                 "_trace", "_trace_fn")
+                 "_trace", "_trace_fn", "kernel", "_operands")
 
     def __init__(self, memory: np.ndarray, regs: Dict[int, np.ndarray],
                  tag: np.ndarray, batch_size: int, tier: str,
                  trace: Optional[List[TraceEvent]] = None,
-                 trace_fn: Optional[Callable[[], List[TraceEvent]]] = None):
+                 trace_fn: Optional[Callable[[], List[TraceEvent]]] = None,
+                 kernel=None):
         self.memory = memory
         self.regs = regs
         self.tag = tag
@@ -92,12 +93,22 @@ class ServeResult:
         self.tier = tier               # "vm" | "fused" | "single"
         self._trace = trace
         self._trace_fn = trace_fn
+        self.kernel = kernel           # frontend Kernel, when submitted as one
+        self._operands = None
 
     @property
     def trace(self) -> List[TraceEvent]:
         if self._trace is None:
             self._trace = self._trace_fn() if self._trace_fn else []
         return self._trace
+
+    @property
+    def operands(self) -> Optional[Dict[str, np.ndarray]]:
+        """Results read back by operand name (kernel submissions only);
+        materialised lazily like ``trace``."""
+        if self._operands is None and self.kernel is not None:
+            self._operands = self.kernel.unpack(self.memory)
+        return self._operands
 
     def __repr__(self) -> str:
         return (f"ServeResult(tier={self.tier!r}, "
@@ -109,11 +120,12 @@ class Ticket:
     """Future-like handle returned by :meth:`MVEScheduler.submit`."""
 
     def __init__(self, rid: int, program, memory, cp: CompiledProgram,
-                 submitted_at: Optional[float] = None):
+                 submitted_at: Optional[float] = None, kernel=None):
         self.rid = rid
         self.program = program
         self.memory = memory
         self.cp = cp
+        self.kernel = kernel
         self.submitted_at = submitted_at if submitted_at is not None \
             else time.perf_counter()
         self.done_at: Optional[float] = None
@@ -215,15 +227,30 @@ class MVEScheduler:
             self._worker.start()
 
     # -- client API --------------------------------------------------------
-    def submit(self, program: isa.Program, memory) -> Ticket:
+    def submit(self, program: isa.Program, memory=None) -> Ticket:
         """Enqueue one program execution; returns a :class:`Ticket`.
+
+        ``program`` is a raw instruction sequence plus a flat memory
+        image, or a frontend :class:`~repro.frontend.Kernel` plus a dict
+        of named operand arrays (or nothing — declared inits apply);
+        kernel submissions read results back by name through
+        ``ticket.result().operands``.
 
         Thread-safe; callable from any number of client threads.  In
         deterministic mode nothing runs until :meth:`drain`."""
         submitted_at = time.perf_counter()   # before the (cold) compile
-        cp = compile_program(program, self.cfg, mode=self.mode)
+        kernel = None
+        if hasattr(program, "plan") and hasattr(program, "program"):
+            kernel = program
+            if memory is None or isinstance(memory, dict):
+                memory = kernel.pack(memory)  # named arrays / inits
+            # else: an already-packed flat memory image — pass through
+            program = kernel.program
+        elif memory is None:
+            raise TypeError("raw program submissions need a memory image")
+        cp = compile_program(kernel or program, self.cfg, mode=self.mode)
         t = Ticket(next(self._rid), tuple(program), memory, cp,
-                   submitted_at=submitted_at)
+                   submitted_at=submitted_at, kernel=kernel)
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
@@ -376,7 +403,8 @@ class MVEScheduler:
                 return [ServeResult(memory=np.asarray(mem),
                                     regs=state.regs, tag=state.tag,
                                     batch_size=1, tier="single",
-                                    trace=state.trace)]
+                                    trace=state.trace,
+                                    kernel=tickets[0].kernel)]
             return tickets, "single", fin_single
 
         runner = fused if fused is not None else cp
@@ -415,7 +443,7 @@ class MVEScheduler:
                     memory=mem[b],
                     regs={r: v[b] for r, v in regs.items()},
                     tag=tag[b], batch_size=n, tier=tier,
-                    trace_fn=trace_fn))
+                    trace_fn=trace_fn, kernel=tickets[b].kernel))
             return out
         return tickets, tier, fin_batch
 

@@ -1,0 +1,658 @@
+"""The original hand-coded Section-IV pattern programs (PR 1-3 era).
+
+Frozen copies of the legacy ``core/patterns.py`` program builders —
+flat ``isa.Instr`` lists with manually-assigned register numbers,
+hand-sequenced config ops and raw byte offsets.  They are the
+*equivalence references* for the kernel frontend: ``tests/test_frontend``
+asserts that every frontend-built pattern is bit-identical (memory, regs
+modulo the register renaming, Tag, TraceEvents) to these on all three
+executors.  Do not modernize this file; its value is that it does not
+change.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import numpy as np
+
+from repro.core import isa
+from repro.core.isa import DType
+from repro.core.machine import MVEConfig
+from repro.core.patterns import NeonWork, PatternRun
+
+LANES = MVEConfig().lanes  # 8192
+
+
+def _mem(size: int) -> np.ndarray:
+    return np.zeros(size, dtype=np.float64)
+
+
+# ---------------------------------------------------------------------------
+# 1. Linpack: daxpy (1D)                        y[i] += alpha * x[i]
+# ---------------------------------------------------------------------------
+
+def daxpy(n: int = LANES, seed: int = 0) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n).astype(np.float32)
+    y = rng.standard_normal(n).astype(np.float32)
+    alpha = np.float32(1.5)
+    mem = _mem(2 * n)
+    mem[:n] = x
+    mem[n:2 * n] = y
+    expected = y + alpha * x
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32),
+        isa.vsetdimc(1), isa.vsetdiml(0, n),
+        isa.scalar(4),
+        isa.vsld(DType.F, 0, 0, 1),            # x
+        isa.vsld(DType.F, 1, n, 1),            # y
+        isa.vsetdup(DType.F, 2, 1.5),
+        isa.vmul(DType.F, 3, 0, 2),
+        isa.vadd(DType.F, 1, 1, 3),
+        isa.vsst(DType.F, 1, n, 1),
+    ]
+
+    def check(mem_after, state):
+        np.testing.assert_allclose(mem_after[n:2 * n], expected, rtol=1e-5)
+
+    return PatternRun("daxpy", "Linpack", "1D", p, mem, check,
+                      NeonWork(vector_ops=2, elements=n, bits=32,
+                               mem_bytes=3 * 4 * n),
+                      flops=2 * n, copy_bytes=8 * n)
+
+
+# ---------------------------------------------------------------------------
+# 2. XNNPACK: row-wise GEMM with multi-dimensional replication (Section IV)
+# ---------------------------------------------------------------------------
+
+def gemm(n_rows: int = 128, k: int = 16, m: int = 64, seed: int = 1,
+         lanes: int = LANES, dtype: DType = DType.F) -> PatternRun:
+    """C[N,M] = A[N,K] @ B[K,M] with input/weight replication (2D).
+
+    ``dtype=DType.W`` gives the quantized-CNN (int16) variant used for
+    the Figure 9 GPU-crossover sweep."""
+    rng = np.random.default_rng(seed)
+    if dtype is DType.W:
+        a = rng.integers(-8, 8, (n_rows, k)).astype(np.float32)
+        b = rng.integers(-8, 8, (k, m)).astype(np.float32)
+    else:
+        a = rng.standard_normal((n_rows, k)).astype(np.float32)
+        b = rng.standard_normal((k, m)).astype(np.float32)
+    rows_per_iter = min(lanes // m, n_rows, 256)
+    a_base, b_base, c_base = 0, n_rows * k, n_rows * k + k * m
+    mem = _mem(c_base + n_rows * m)
+    mem[a_base:b_base] = a.ravel()
+    mem[b_base:c_base] = b.ravel()
+    expected = (a @ b).astype(np.float32)
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(dtype.bits),
+        isa.vsetdimc(2),
+        isa.vsetdiml(0, m), isa.vsetdiml(1, rows_per_iter),
+        isa.vsetldstr(1, k),       # input column stride
+        isa.vsetststr(1, m),       # output row stride
+    ]
+    for n0 in range(0, n_rows, rows_per_iter):
+        p.append(isa.scalar(6))                       # loop + addressing
+        p.append(isa.vsetdup(dtype, 2, 0))            # acc = 0
+        for kk in range(k):
+            p.append(isa.scalar(4))
+            # input column A[n0:n0+R, kk] replicated horizontally (S0=0)
+            p.append(isa.vsld(dtype, 0, a_base + n0 * k + kk, 0, 3))
+            # weight row B[kk, :] replicated vertically (S1=0)
+            p.append(isa.vsld(dtype, 1, b_base + kk * m, 1, 0))
+            p.append(isa.vmul(dtype, 3, 0, 1))
+            p.append(isa.vadd(dtype, 2, 2, 3))
+        # store R output rows sequentially (S0=1, S1=M via mode 2)
+        p.append(isa.vsst(dtype, 2, c_base + n0 * m, 1, 2))
+
+    def check(mem_after, state):
+        got = mem_after[c_base:c_base + n_rows * m].reshape(n_rows, m)
+        np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-4)
+
+    flops = 2.0 * n_rows * k * m
+    return PatternRun("gemm", "XNNPACK", "2D", p, mem, check,
+                      NeonWork(vector_ops=2 * k, elements=n_rows * m, bits=32,
+                               mem_bytes=4.0 * (n_rows * k + k * m +
+                                                n_rows * m)),
+                      flops=flops,
+                      copy_bytes=4.0 * (n_rows * k + k * m + n_rows * m))
+
+
+# ---------------------------------------------------------------------------
+# 3. XNNPACK: SpMM — CSR sparse inputs, random weight-row loads (Section IV)
+# ---------------------------------------------------------------------------
+
+def spmm(rows: int = 64, cols: int = 64, m: int = 64, density: float = 0.25,
+         seed: int = 2, lanes: int = LANES) -> PatternRun:
+    """out[r,:] = sum_nz A[r,c] * W[c,:] using random-base loads."""
+    rng = np.random.default_rng(seed)
+    a = (rng.random((rows, cols)) < density) * \
+        rng.standard_normal((rows, cols))
+    a = a.astype(np.float32)
+    w = rng.standard_normal((cols, m)).astype(np.float32)
+    expected = (a @ w).astype(np.float32)
+
+    nnz_r, nnz_c = np.nonzero(a)
+    nnz_v = a[nnz_r, nnz_c]
+    w_base = 0
+    v_base = w_base + cols * m
+    ptr_base = v_base + len(nnz_v)
+    out_base = ptr_base + len(nnz_v)
+    mem = _mem(out_base + len(nnz_v) * m)   # one partial product row per nnz
+    mem[w_base:v_base] = w.ravel()
+    mem[v_base:ptr_base] = nnz_v
+    # "Core computes the weight row addresses corresponding to non-zero
+    # input cells" — the pointer array the random load walks.
+    mem[ptr_base:out_base] = w_base + nnz_c * m
+
+    group = min(lanes // m, 256)
+    p: List[isa.Instr] = [isa.vsetwidth(32)]
+    lane_rows: List[int] = []
+    i = 0
+    while i < len(nnz_v):
+        g = min(group, len(nnz_v) - i)
+        p += [isa.scalar(8),
+              isa.vsetdimc(2), isa.vsetdiml(0, m), isa.vsetdiml(1, g)]
+        # nnz values replicated horizontally from a strided load (S0=0,S1=1)
+        p.append(isa.vsld(DType.F, 0, v_base + i, 0, 1))
+        # weight rows from random base pointers, sequential inner dim
+        p.append(isa.vrld(DType.F, 1, ptr_base + i, 1))
+        p.append(isa.vmul(DType.F, 2, 0, 1))
+        # store partial products; combined on the scalar core per-row
+        p.append(isa.vsst(DType.F, 2, out_base + i * m, 1, 2))
+        p.append(isa.scalar(2 * g))
+        i += g
+
+    def check(mem_after, state):
+        partial = mem_after[out_base:out_base + len(nnz_v) * m]
+        got = np.zeros((rows, m), dtype=np.float32)
+        for j, r in enumerate(nnz_r):
+            got[r] += partial[j * m:(j + 1) * m].astype(np.float32)
+        np.testing.assert_allclose(got, expected, rtol=1e-4, atol=1e-4)
+
+    flops = 2.0 * len(nnz_v) * m
+    return PatternRun("spmm", "XNNPACK", "2D", p, mem, check,
+                      NeonWork(vector_ops=2 * density * cols,
+                               elements=rows * m, bits=32,
+                               mem_bytes=4.0 * (len(nnz_v) * (m + 2) +
+                                                rows * m)),
+                      flops=flops,
+                      copy_bytes=4.0 * (cols * m + 2 * len(nnz_v)))
+
+
+# ---------------------------------------------------------------------------
+# 4. CMSIS-DSP: FIR filter (1D, multiple shifted loads)
+# ---------------------------------------------------------------------------
+
+def fir(n: int = LANES, taps: int = 16, seed: int = 3) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(n + taps).astype(np.float32)
+    h = rng.standard_normal(taps).astype(np.float32)
+    mem = _mem(2 * (n + taps))
+    mem[:n + taps] = x
+    out_base = n + taps
+    expected = np.stack([x[t:t + n] for t in range(taps)], 0).T @ h
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32), isa.vsetdimc(1), isa.vsetdiml(0, n),
+        isa.vsetdup(DType.F, 2, 0.0),
+    ]
+    for t in range(taps):
+        p += [isa.scalar(3),
+              isa.vsld(DType.F, 0, t, 1),
+              isa.vsetdup(DType.F, 1, float(h[t])),
+              isa.vmul(DType.F, 3, 0, 1),
+              isa.vadd(DType.F, 2, 2, 3)]
+    p.append(isa.vsst(DType.F, 2, out_base, 1))
+
+    def check(mem_after, state):
+        np.testing.assert_allclose(mem_after[out_base:out_base + n],
+                                   expected, rtol=1e-4, atol=1e-4)
+
+    return PatternRun("fir", "CMSIS-DSP", "1D", p, mem, check,
+                      NeonWork(vector_ops=2 * taps, elements=n, bits=32,
+                               mem_bytes=4.0 * (taps * n / 4 + 2 * n)),
+                      flops=2.0 * taps * n, copy_bytes=8.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 5. Kvazaar: intra-picture prediction (3D strided load, Figure 3)
+# ---------------------------------------------------------------------------
+
+def intra_pred(blocks: int = 256, seed: int = 4) -> PatternRun:
+    """3D load with S=(1,0,3): each 3-pel reference row is replicated down
+    a 3x3 predicted block (Figure 3), then averaged with a second ref."""
+    bs = 3
+    refs = np.random.default_rng(seed).integers(
+        0, 255, size=(blocks, bs)).astype(np.int32)
+    refs2 = np.random.default_rng(seed + 1).integers(
+        0, 255, size=(blocks, bs)).astype(np.int32)
+    r1_base, r2_base = 0, blocks * bs
+    out_base = 2 * blocks * bs
+    mem = _mem(out_base + blocks * bs * bs)
+    mem[r1_base:r2_base] = refs.ravel()
+    mem[r2_base:out_base] = refs2.ravel()
+    # predicted[b, y, x] = (ref1[b, x] + ref2[b, y]) >> 1  (planar-ish)
+    expected = (refs[:, None, :] + refs2[:, :, None]) >> 1
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32),
+        isa.vsetdimc(3),
+        isa.vsetdiml(0, bs), isa.vsetdiml(1, bs), isa.vsetdiml(2, blocks),
+        isa.vsetldstr(2, bs),
+        isa.scalar(6),
+        # ref row replicated down the column dim: S = (1, 0, 3)
+        isa.vsld(DType.W, 0, r1_base, 1, 0, 3),
+        # ref col replicated across the row dim: S = (0, 1, 3)
+        isa.vsld(DType.W, 1, r2_base, 0, 1, 3),
+        isa.vadd(DType.W, 2, 0, 1),
+        isa.vshi(DType.W, 2, 2, -1),
+        isa.vsst(DType.W, 2, out_base, 1, 2, 2),
+    ]
+
+    def check(mem_after, state):
+        got = mem_after[out_base:out_base + blocks * bs * bs].reshape(
+            blocks, bs, bs).astype(np.int64)
+        np.testing.assert_array_equal(got, expected)
+
+    n = blocks * bs * bs
+    return PatternRun("intra_pred", "Kvazaar", "3D", p, mem, check,
+                      NeonWork(vector_ops=3, elements=n, bits=16,
+                               mem_bytes=4.0 * (2 * blocks * bs + n)),
+                      flops=2.0 * n, copy_bytes=4.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 6. libjpeg: h2v2 upsample (random base + replication, Figure 4)
+# ---------------------------------------------------------------------------
+
+def upsample(rows: int = 32, m: int = 128, seed: int = 5) -> PatternRun:
+    """Each pixel replicated 2x horizontally; vertical replication via
+    duplicated row pointers (the paper's 4th random dimension)."""
+    rng = np.random.default_rng(seed)
+    img = rng.integers(0, 255, size=(rows, m)).astype(np.int32)
+    # rows live at "random" (shuffled) locations, like libjpeg row pointers
+    row_order = rng.permutation(rows)
+    in_base = 0
+    mem_rows = np.zeros(rows * m)
+    row_addr = np.zeros(rows, dtype=np.int64)
+    for slot, r in enumerate(row_order):
+        mem_rows[slot * m:(slot + 1) * m] = img[r]
+        row_addr[r] = in_base + slot * m
+    in_ptr_base = rows * m
+    out_ptr_base = in_ptr_base + 2 * rows
+    out_base = out_ptr_base + 2 * rows
+    mem = _mem(out_base + 2 * rows * 2 * m)
+    mem[:rows * m] = mem_rows
+    # input pointer per *output* row (each input row appears twice)
+    in_ptrs = np.repeat(row_addr, 2)
+    out_ptrs = out_base + np.arange(2 * rows) * (2 * m)
+    mem[in_ptr_base:in_ptr_base + 2 * rows] = in_ptrs
+    mem[out_ptr_base:out_ptr_base + 2 * rows] = out_ptrs
+    expected = np.repeat(np.repeat(img, 2, axis=0), 2, axis=1)
+
+    group = max(1, min(LANES // (2 * m), 2 * rows, 256))
+    p: List[isa.Instr] = [isa.vsetwidth(32)]
+    for n0 in range(0, 2 * rows, group):
+        g = min(group, 2 * rows - n0)
+        p += [isa.scalar(6),
+              isa.vsetdimc(3),
+              isa.vsetdiml(0, 2), isa.vsetdiml(1, m), isa.vsetdiml(2, g),
+              # load: replicate 2x (S0=0), pixels sequential (S1=1),
+              # random row base from the pointer array
+              isa.vrld(DType.B, 0, in_ptr_base + n0, 0, 1),
+              # store: sequential (S0=1), row-major (S1=2 -> derived 2),
+              # random output row base
+              isa.vrst(DType.B, 0, out_ptr_base + n0, 1, 2)]
+
+    def check(mem_after, state):
+        got = mem_after[out_base:out_base + 2 * rows * 2 * m].reshape(
+            2 * rows, 2 * m).astype(np.int64)
+        np.testing.assert_array_equal(got, expected)
+
+    n = rows * m
+    return PatternRun("upsample", "libjpeg", "4D", p, mem, check,
+                      NeonWork(vector_ops=3, elements=4 * n, bits=8,
+                               mem_bytes=5.0 * n),
+                      flops=4.0 * n, copy_bytes=5.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 7. libpng: "up" defilter — rows at random pointers (2D random)
+# ---------------------------------------------------------------------------
+
+def png_up(rows: int = 64, width: int = 128, seed: int = 6) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    raw = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
+    prior = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
+    raw_base, prior_base = 0, rows * width
+    rp_base = 2 * rows * width
+    pp_base = rp_base + rows
+    out_base = pp_base + rows
+    mem = _mem(out_base + rows * width)
+    mem[raw_base:prior_base] = raw.ravel()
+    mem[prior_base:rp_base] = prior.ravel()
+    mem[rp_base:rp_base + rows] = raw_base + np.arange(rows) * width
+    mem[pp_base:pp_base + rows] = prior_base + np.arange(rows) * width
+    expected = (raw + prior) & 0xFF
+
+    group = max(1, min(LANES // width, rows, 256))
+    p: List[isa.Instr] = [isa.vsetwidth(32)]
+    for r0 in range(0, rows, group):
+        g = min(group, rows - r0)
+        p += [isa.scalar(5),
+              isa.vsetdimc(2), isa.vsetdiml(0, width), isa.vsetdiml(1, g),
+              isa.vrld(DType.B, 0, rp_base + r0, 1),
+              isa.vrld(DType.B, 1, pp_base + r0, 1),
+              isa.vadd(DType.B, 2, 0, 1),        # uint8 wrap == & 0xFF
+              isa.vsst(DType.B, 2, out_base + r0 * width, 1, 2)]
+
+    def check(mem_after, state):
+        got = mem_after[out_base:out_base + rows * width].reshape(
+            rows, width).astype(np.int64)
+        np.testing.assert_array_equal(got, expected)
+
+    n = rows * width
+    return PatternRun("png_up", "libpng", "2D", p, mem, check,
+                      NeonWork(vector_ops=3, elements=n, bits=8,
+                               mem_bytes=3.0 * n),
+                      flops=float(n), copy_bytes=3.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 8. libwebp: RGB -> gray (strided channel loads)
+# ---------------------------------------------------------------------------
+
+def rgb2gray(pixels: int = LANES, seed: int = 7) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    rgb = rng.integers(0, 255, size=(pixels, 3)).astype(np.int32)
+    in_base, out_base = 0, 3 * pixels
+    mem = _mem(out_base + pixels)
+    mem[:3 * pixels] = rgb.ravel()
+    expected = (5 * rgb[:, 0] + 9 * rgb[:, 1] + 2 * rgb[:, 2]) >> 4
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(16), isa.vsetdimc(1), isa.vsetdiml(0, pixels),
+        isa.vsetldstr(0, 3),
+        isa.scalar(4),
+        isa.vsld(DType.W, 0, in_base + 0, 3),     # R, stride 3
+        isa.vsld(DType.W, 1, in_base + 1, 3),     # G
+        isa.vsld(DType.W, 2, in_base + 2, 3),     # B
+        isa.vsetdup(DType.W, 3, 5), isa.vmul(DType.W, 0, 0, 3),
+        isa.vsetdup(DType.W, 3, 9), isa.vmul(DType.W, 1, 1, 3),
+        isa.vsetdup(DType.W, 3, 2), isa.vmul(DType.W, 2, 2, 3),
+        isa.vadd(DType.W, 0, 0, 1),
+        isa.vadd(DType.W, 0, 0, 2),
+        isa.vshi(DType.W, 0, 0, -4),
+        isa.vsst(DType.W, 0, out_base, 1),
+    ]
+
+    def check(mem_after, state):
+        got = mem_after[out_base:out_base + pixels].astype(np.int64)
+        np.testing.assert_array_equal(got, expected)
+
+    return PatternRun("rgb2gray", "libwebp", "1D", p, mem, check,
+                      NeonWork(vector_ops=10, elements=pixels, bits=16,
+                               mem_bytes=4.0 * pixels),
+                      flops=6.0 * pixels, copy_bytes=4.0 * pixels)
+
+
+# ---------------------------------------------------------------------------
+# 9. Skia: alpha blend (8-bit pixels, 2D rows)
+# ---------------------------------------------------------------------------
+
+def alpha_blend(rows: int = 64, width: int = 128, seed: int = 8
+                ) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
+    dst = rng.integers(0, 255, size=(rows, width)).astype(np.int32)
+    alpha = 6                        # 4-bit alpha: 6/16 src + 10/16 dst
+    s_base, d_base = 0, rows * width
+    mem = _mem(2 * rows * width)
+    mem[s_base:d_base] = src.ravel()
+    mem[d_base:] = dst.ravel()
+    expected = (src * alpha + dst * (16 - alpha)) >> 4
+
+    n = rows * width
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32),
+        isa.vsetdimc(2), isa.vsetdiml(0, width), isa.vsetdiml(1, rows),
+        isa.scalar(4),
+        isa.vsld(DType.W, 0, s_base, 1, 2),
+        isa.vsld(DType.W, 1, d_base, 1, 2),
+        isa.vsetdup(DType.W, 2, alpha),
+        isa.vmul(DType.W, 0, 0, 2),
+        isa.vsetdup(DType.W, 2, 16 - alpha),
+        isa.vmul(DType.W, 1, 1, 2),
+        isa.vadd(DType.W, 0, 0, 1),
+        isa.vshi(DType.W, 0, 0, -4),
+        isa.vsst(DType.W, 0, d_base, 1, 2),
+    ]
+
+    def check(mem_after, state):
+        got = mem_after[d_base:d_base + n].reshape(rows, width)
+        np.testing.assert_array_equal(got.astype(np.int64), expected)
+
+    return PatternRun("alpha_blend", "Skia", "2D", p, mem, check,
+                      NeonWork(vector_ops=8, elements=n, bits=8,
+                               mem_bytes=3.0 * n),
+                      flops=4.0 * n, copy_bytes=3.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 10. webaudio: multi-channel chunk mixing (3D)
+# ---------------------------------------------------------------------------
+
+def audio_mix(chunks: int = 16, channels: int = 4, samples: int = 128,
+              seed: int = 9) -> PatternRun:
+    """Processes multiple 128-sample chunks at once — the paper's flagship
+    example of limited 1D DLP (Section I: webaudio exposes only 128)."""
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((chunks, channels, samples)).astype(np.float32)
+    b = rng.standard_normal((chunks, channels, samples)).astype(np.float32)
+    gain = np.float32(0.7)
+    n = chunks * channels * samples
+    mem = _mem(3 * n)
+    mem[:n] = a.ravel()
+    mem[n:2 * n] = b.ravel()
+    expected = (a + b) * gain
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32),
+        isa.vsetdimc(3),
+        isa.vsetdiml(0, samples), isa.vsetdiml(1, channels),
+        isa.vsetdiml(2, chunks),
+        isa.scalar(5),
+        isa.vsld(DType.F, 0, 0, 1, 2, 2),
+        isa.vsld(DType.F, 1, n, 1, 2, 2),
+        isa.vadd(DType.F, 0, 0, 1),
+        isa.vsetdup(DType.F, 2, 0.7),
+        isa.vmul(DType.F, 0, 0, 2),
+        isa.vsst(DType.F, 0, 2 * n, 1, 2, 2),
+    ]
+
+    def check(mem_after, state):
+        got = mem_after[2 * n:3 * n].reshape(chunks, channels, samples)
+        np.testing.assert_allclose(got, expected, rtol=1e-5)
+
+    return PatternRun("audio_mix", "webaudio", "3D", p, mem, check,
+                      NeonWork(vector_ops=2, elements=n, bits=32,
+                               mem_bytes=12.0 * n),
+                      flops=2.0 * n, copy_bytes=12.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 11. zlib: adler32-style reduction (dimension-level masked tree, Section IV)
+# ---------------------------------------------------------------------------
+
+def reduction(n: int = LANES, seed: int = 10, floor: int = 256
+              ) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    x = rng.integers(0, 255, size=n).astype(np.int64)
+    in_base = 0
+    tmp_base = n
+    out_base = n + n // 2
+    mem = _mem(out_base + floor)
+    mem[:n] = x
+    expected_sum = int(x.sum())
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32),
+        isa.vsetdimc(1), isa.vsetdiml(0, n),
+        isa.scalar(3),
+        isa.vsld(DType.DW, 0, in_base, 1),
+    ]
+    m = n
+    while m > floor:
+        half = m // 2
+        p += [
+            isa.scalar(4),
+            # Split M lanes into 2 halves along a fresh highest dim and
+            # mask off the first one (Section IV reduction snippet).
+            isa.vsetdimc(2), isa.vsetdiml(0, half), isa.vsetdiml(1, 2),
+            isa.vunsetmask(0),
+            isa.vsst(DType.DW, 0, tmp_base - half, 1, 2),
+            isa.vsetmask(0),
+            isa.vsetdimc(1), isa.vsetdiml(0, half),
+            isa.vsld(DType.DW, 1, tmp_base, 1),
+            isa.vadd(DType.DW, 0, 0, 1),
+        ]
+        m = half
+    p += [isa.vsetdimc(1), isa.vsetdiml(0, floor),
+          isa.vsst(DType.DW, 0, out_base, 1),
+          isa.scalar(floor)]          # final scalar-core reduction
+
+    def check(mem_after, state):
+        got = int(mem_after[out_base:out_base + floor].sum())
+        assert got == expected_sum, (got, expected_sum)
+
+    return PatternRun("reduction", "zlib", "1D", p, mem, check,
+                      NeonWork(vector_ops=2, elements=n, bits=32,
+                               mem_bytes=4.0 * n),
+                      flops=float(n), copy_bytes=4.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 12. boringssl: XOR stream cipher with key replication (2D)
+# ---------------------------------------------------------------------------
+
+def xor_cipher(blocks: int = 256, key_len: int = 32, seed: int = 11
+               ) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    pt = rng.integers(0, 255, size=(blocks, key_len)).astype(np.int64)
+    key = rng.integers(0, 255, size=key_len).astype(np.int64)
+    n = blocks * key_len
+    p_base, k_base, c_base = 0, n, n + key_len
+    mem = _mem(c_base + n)
+    mem[p_base:n] = pt.ravel()
+    mem[k_base:k_base + key_len] = key
+    expected = pt ^ key[None, :]
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(8),
+        isa.vsetdimc(2), isa.vsetdiml(0, key_len), isa.vsetdiml(1, blocks),
+        isa.scalar(4),
+        isa.vsld(DType.B, 0, p_base, 1, 2),
+        isa.vsld(DType.B, 1, k_base, 1, 0),       # key replicated (S1=0)
+        isa.vxor(DType.B, 2, 0, 1),
+        isa.vsst(DType.B, 2, c_base, 1, 2),
+    ]
+
+    def check(mem_after, state):
+        got = mem_after[c_base:c_base + n].reshape(blocks, key_len)
+        np.testing.assert_array_equal(
+            got.astype(np.int64) & 0xFF, expected)
+
+    return PatternRun("xor_cipher", "boringssl", "2D", p, mem, check,
+                      NeonWork(vector_ops=1, elements=n, bits=8,
+                               mem_bytes=2.0 * n),
+                      flops=float(n), copy_bytes=2.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 13. Arm optimized routines: memcpy (1D bytes)
+# ---------------------------------------------------------------------------
+
+def memcpy(n: int = LANES, seed: int = 12) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, 255, size=n).astype(np.int64)
+    mem = _mem(2 * n)
+    mem[:n] = src
+
+    p: List[isa.Instr] = [
+        isa.vsetwidth(8), isa.vsetdimc(1), isa.vsetdiml(0, n),
+        isa.scalar(2),
+        isa.vsld(DType.B, 0, 0, 1),
+        isa.vsst(DType.B, 0, n, 1),
+    ]
+
+    def check(mem_after, state):
+        np.testing.assert_array_equal(
+            mem_after[n:2 * n].astype(np.int64) & 0xFF, src)
+
+    return PatternRun("memcpy", "ArmRoutines", "1D", p, mem, check,
+                      NeonWork(vector_ops=0.5, elements=n, bits=8,
+                               mem_bytes=2.0 * n),
+                      flops=0.0, copy_bytes=2.0 * n)
+
+
+# ---------------------------------------------------------------------------
+# 14. Matrix transpose (Section IV; XNNPACK 512x49 MobileNet-V1 case)
+# ---------------------------------------------------------------------------
+
+def transpose(m: int = 512, n: int = 49, seed: int = 13) -> PatternRun:
+    rng = np.random.default_rng(seed)
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    in_base, out_base = 0, m * n
+    mem = _mem(2 * m * n)
+    mem[:m * n] = a.ravel()
+    expected = a.T.copy()
+
+    cols_per_iter = max(1, min(LANES // m, 256))
+    p: List[isa.Instr] = [
+        isa.vsetwidth(32),
+        isa.vsetdimc(2), isa.vsetdiml(0, m), isa.vsetdiml(1, cols_per_iter),
+        isa.vsetldstr(0, n), isa.vsetststr(1, m),
+    ]
+    for i in range(0, n, cols_per_iter):
+        c = min(cols_per_iter, n - i)
+        if c != cols_per_iter:
+            p.append(isa.vsetdiml(1, c))
+        p += [isa.scalar(4),
+              # load c columns: element (y,x) <- input[x, i+y]
+              isa.vsld(DType.F, 0, in_base + i, 3, 1),
+              # store c rows of output: element (y,x) -> output[i+y, x]
+              isa.vsst(DType.F, 0, out_base + i * m, 1, 3)]
+
+    def check(mem_after, state):
+        got = mem_after[out_base:out_base + n * m].reshape(n, m)
+        np.testing.assert_allclose(got, expected, rtol=1e-6)
+
+    return PatternRun("transpose", "XNNPACK", "2D", p, mem, check,
+                      NeonWork(vector_ops=1.5, elements=m * n, bits=32,
+                               mem_bytes=8.0 * m * n),
+                      flops=0.0, copy_bytes=8.0 * m * n)
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+LEGACY_PATTERNS: Dict[str, Callable[..., PatternRun]] = {
+    "daxpy": daxpy,
+    "gemm": gemm,
+    "spmm": spmm,
+    "fir": fir,
+    "intra_pred": intra_pred,
+    "upsample": upsample,
+    "png_up": png_up,
+    "rgb2gray": rgb2gray,
+    "alpha_blend": alpha_blend,
+    "audio_mix": audio_mix,
+    "reduction": reduction,
+    "xor_cipher": xor_cipher,
+    "memcpy": memcpy,
+    "transpose": transpose,
+}
