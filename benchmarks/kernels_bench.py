@@ -64,12 +64,18 @@ def kernel_microbench() -> List[Tuple[str, float, str]]:
     rows.append(("kernels/flash_attention_ref", t_fr,
                  f"ratio={t_fa/t_fr:.1f}x"))
 
-    # MVE pattern execution through the compiled engine (docs/ENGINE.md):
-    # one fused jit call replaces the per-instruction interpreter loop.
-    from repro.core import compile_program
+    # MVE pattern execution through the pluggable target API
+    # (docs/TARGETS.md): one loop over every registered target — the
+    # wall clock is the shared functional engine (identical work, so the
+    # rows double as a dispatch-overhead check), the derived column the
+    # per-target modeled cycles the cost models assign the same run.
+    from repro import targets
     from repro.core.patterns import PATTERNS
     run = PATTERNS["transpose"]()
-    cp = compile_program(run.program)
-    t_eng = _time(lambda m: cp.run(m)[0], run.memory)
-    rows.append(("kernels/mve_transpose_engine", t_eng, "512x49;fused-jit"))
+    for tname in targets.list_targets():
+        art = targets.compile(run.program, target=tname)
+        t_eng = _time(lambda m: art.run(m)[0], run.memory)
+        tl = art.timeline()
+        rows.append((f"kernels/mve_transpose/{tname}", t_eng,
+                     f"512x49;model_cycles={tl.total_cycles:.0f}"))
     return rows

@@ -1,11 +1,15 @@
 """Reproductions of the paper's tables/figures on the MVE model stack.
 
 Each function mirrors one table/figure and returns rows of
-(name, value, derived) that benchmarks/run.py prints as CSV.  Energy uses
-an explicit component model (constants below, documented in
-EXPERIMENTS.md): the paper's qualitative claims — large energy wins from
-instruction-count reduction + SRAM-local compute — are what we validate,
-not the absolute joules.
+(name, value, derived) that benchmarks/run.py prints as CSV.  The
+cross-ISA figures (7/10/11/13) are loops over the pluggable target
+registry (:mod:`repro.targets`, docs/TARGETS.md): every pattern is
+executed once on the shared functional engine — re-validated against its
+numpy oracle — and then priced per target.  Energy uses the shared
+component model (:class:`repro.core.cost.EnergyParams` — one source of
+truth for benchmarks and targets): the paper's qualitative claims —
+large energy wins from instruction-count reduction + SRAM-local compute
+— are what we validate, not the absolute joules.
 """
 from __future__ import annotations
 
@@ -13,56 +17,40 @@ from typing import Dict, List, Tuple
 
 import numpy as np
 
-from repro.core import MVEConfig, cost, rvv
-from repro.core.cost import GPUModel, NeonModel, TimingParams
+from repro import targets
+from repro.core import MVEConfig, cost
+from repro.core.cost import GPUModel, NeonModel
 from repro.core.isa import DType, Op
-from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET, run_pattern
+from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET
 
-# --- energy constants (pJ) --------------------------------------------------
-# In-SRAM computing: energy per array per active cycle (two wordline
-# activations + peripheral logic, Neural-Cache-scale, 7nm).
-E_ARRAY_CYCLE = 8.0
-# L2 data movement per byte (incl. TMU transpose write).
-E_L2_BYTE = 8.0       # in-situ L2->TMU path (no core round trip)
-# MVE instruction issue/dispatch through the controller.
-E_ISSUE = 50.0
-# OoO mobile core: per scalar instruction / per 128-bit SIMD op.
-E_SCALAR = 150.0
-E_SIMD_OP = 250.0
-E_L1_BYTE = 25.0      # L1+L2+register-file round trip per byte
-# GPU: per int-MAC flop + fixed launch + copy per byte.
-E_GPU_FLOP = 2.5
-E_GPU_LAUNCH = 2.0e7
-E_GPU_COPY_BYTE = 30.0
+# Shared energy component model (pJ); see EnergyParams for the
+# documented per-constant assumptions.
+EP = cost.DEFAULT_ENERGY
 
 FREQ = 2.8  # GHz
 
 
-def _mve_run(name: str, cfg: MVEConfig | None = None, **kw):
-    cfg = cfg or MVEConfig()
+def _mve_run(name: str, cfg: MVEConfig | None = None,
+             target="mve-bs", **kw):
+    """Execute one pattern through the target API; returns
+    ``(run, state, timeline)`` priced under ``target``."""
     run = PATTERNS[name](**kw)
-    # compiled-engine path (cached per program; bit-identical to the
-    # step interpreter — tests/test_engine.py)
-    mem_after, state = run_pattern(run, cfg, compiled=True)
+    # compiled-engine path (cached per program+target; bit-identical to
+    # the step interpreter — tests/test_engine.py, tests/test_targets.py)
+    art = targets.compile(run.program, target=target, cfg=cfg)
+    mem_after, state = art.run(run.memory)
     run.check(np.asarray(mem_after), state)      # every bench re-validates
-    tl = cost.simulate(state.trace, cfg)
-    return run, state, tl
+    return run, state, art.timeline(state)
 
 
 def _mve_energy_pj(tl: cost.Timeline, cfg: MVEConfig,
                    mem_bytes: float) -> float:
-    compute = tl.compute_cycles * cfg.num_arrays * E_ARRAY_CYCLE
-    data = mem_bytes * E_L2_BYTE
-    issue = (tl.vector_instructions + tl.config_instructions) * E_ISSUE
-    scalar = tl.scalar_instructions * E_SCALAR
-    return compute + data + issue + scalar
+    return cost.mve_energy(tl, cfg, mem_bytes, EP).total_pj
 
 
 def _neon_energy_pj(neon_cycles: float, work) -> float:
     simd_ops = work.vector_ops * work.elements / (128 // work.bits)
-    scalar = simd_ops * 0.5                     # loop/address overhead
-    return (simd_ops * E_SIMD_OP + scalar * E_SCALAR +
-            work.mem_bytes * E_L1_BYTE)
+    return cost.neon_energy(simd_ops, work.mem_bytes, EP).total_pj
 
 
 # ---------------------------------------------------------------------------
@@ -135,8 +123,8 @@ def fig8_gpu() -> List[Tuple[str, float, str]]:
         gpu_us = gpu.kernel_us(run.flops, run.copy_bytes)
         ratios.append(gpu_us / mve_us)
         e_mve = _mve_energy_pj(tl, cfg, cost.data_bytes(state.trace))
-        e_gpu = (run.flops * E_GPU_FLOP + E_GPU_LAUNCH +
-                 run.copy_bytes * E_GPU_COPY_BYTE)
+        e_gpu = (run.flops * EP.e_gpu_flop + EP.e_gpu_launch +
+                 run.copy_bytes * EP.e_gpu_copy_byte)
         rows.append((f"fig8/{name}", mve_us,
                      f"gpu_time_ratio={gpu_us/mve_us:.2f}x;"
                      f"gpu_energy_ratio={e_gpu/e_mve:.2f}x"))
@@ -172,17 +160,19 @@ def fig9_gemm_sweep() -> List[Tuple[str, float, str]]:
 # ---------------------------------------------------------------------------
 
 def fig10_11_rvv() -> List[Tuple[str, float, str]]:
-    cfg = MVEConfig()
+    mve_t = targets.get_target("mve-bs")
+    rvv_t = targets.get_target("rvv-1d")
     rows, speedups, vratios, sratios = [], [], [], []
     for name in RVV_COMPARISON_SET:
-        run, state, tl = _mve_run(name)
-        trace, stats = rvv.compile_to_rvv(run.program)
-        tl_rvv = cost.simulate(trace, cfg)
-        ms = rvv.mve_stats(run.program)
+        run, state, tl = _mve_run(name, target=mve_t)
+        art_rvv = targets.compile(run.program, target=rvv_t)
+        tl_rvv = art_rvv.timeline(state)
+        mix_rvv = art_rvv.instruction_mix()
+        mix_mve = targets.compile(run.program,
+                                  target=mve_t).instruction_mix()
         sp = tl_rvv.total_cycles / tl.total_cycles
-        vr = stats.vector_instructions / max(ms.vector_instructions, 1)
-        sr = max(stats.scalar_instructions, 1) / \
-            max(ms.scalar_instructions, 1)
+        vr = mix_rvv.vector / max(mix_mve.vector, 1)
+        sr = max(mix_rvv.scalar, 1) / max(mix_mve.scalar, 1)
         speedups.append(sp)
         vratios.append(vr)
         sratios.append(sr)
@@ -248,21 +238,32 @@ def fig12c_precision() -> List[Tuple[str, float, str]]:
 # ---------------------------------------------------------------------------
 
 def fig13_schemes() -> List[Tuple[str, float, str]]:
+    """One loop over the registered in-cache targets: each MVE scheme
+    target is paired with an ad-hoc RVV variant on the same engine (the
+    target API accepts unregistered instances — docs/TARGETS.md)."""
     rows = []
     paper = {"bs": 3.8, "bh": 2.8, "bp": 1.8, "ac": 2.0}
-    for scheme in ("bs", "bh", "bp", "ac"):
-        cfg = MVEConfig(scheme=scheme)
+    mve_targets = [targets.get_target(n) for n in targets.list_targets()
+                   if isinstance(targets.get_target(n),
+                                 targets.InCacheTarget)
+                   and not isinstance(targets.get_target(n),
+                                      targets.RVV1DTarget)]
+    for tgt in mve_targets:
+        if tgt.scheme not in paper:
+            continue                   # third-party schemes: no paper row
+        rvv_variant = targets.RVV1DTarget(name=f"rvv-1d@{tgt.scheme}",
+                                          scheme=tgt.scheme)
         speedups, mu, ru = [], [], []
         for name in RVV_COMPARISON_SET:
-            run, state, tl = _mve_run(name, cfg=cfg)
-            trace, _ = rvv.compile_to_rvv(run.program, cfg)
-            tl_rvv = cost.simulate(trace, cfg)
+            run, state, tl = _mve_run(name, target=tgt)
+            tl_rvv = targets.compile(run.program,
+                                     target=rvv_variant).timeline(state)
             speedups.append(tl_rvv.total_cycles / tl.total_cycles)
             mu.append(tl.lane_utilization)
             ru.append(tl_rvv.lane_utilization)
         geo = float(np.exp(np.mean(np.log(speedups))))
-        rows.append((f"fig13/{scheme}", 0.0,
-                     f"mve_vs_rvv={geo:.2f}x[paper:{paper[scheme]}x];"
+        rows.append((f"fig13/{tgt.scheme}", 0.0,
+                     f"mve_vs_rvv={geo:.2f}x[paper:{paper[tgt.scheme]}x];"
                      f"util_mve={np.mean(mu):.2f};"
                      f"util_rvv={np.mean(ru):.2f}"))
     return rows

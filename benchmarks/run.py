@@ -1,13 +1,16 @@
 """Benchmark runner: one section per paper table/figure + kernel bench +
-the roofline table from the dry-run artifacts.
+the per-target sweep + the roofline table from the dry-run artifacts.
 
     PYTHONPATH=src python -m benchmarks.run [--only fig7,fig10]
     PYTHONPATH=src python -m benchmarks.run --only engine --json BENCH_engine.json
     PYTHONPATH=src python -m benchmarks.run --only engine --quick   # CI smoke
+    PYTHONPATH=src python -m benchmarks.run --only targets --targets mve-bs,rvv-1d
 
 Prints ``name,us_per_call,derived`` CSV; ``--json`` also rewrites the
 given file (the repo tracks ``BENCH_engine.json`` so the perf trajectory
-of the execution engine is versioned alongside the code).
+of the execution engine is versioned alongside the code).  ``--targets``
+filters the ``targets`` section to a comma-separated subset of the
+registered target names (docs/TARGETS.md).
 """
 from __future__ import annotations
 
@@ -22,10 +25,12 @@ from .frontend_bench import frontend_overhead, frontend_overhead_quick
 from .kernels_bench import kernel_microbench
 from .roofline import roofline_rows
 from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
+from .targets_bench import target_sweep
 
 SECTIONS = {
     "engine": engine_vs_interp,
     "frontend": frontend_overhead,
+    "targets": target_sweep,
     "table2": paper_claims.table2_latencies,
     "fig7": paper_claims.fig7_neon,
     "fig8": paper_claims.fig8_gpu,
@@ -46,6 +51,7 @@ _QUICK_SECTIONS = {
     "engine": lambda: engine_vs_interp(iters=1, quick=True),
     "frontend": frontend_overhead_quick,
     "serving": mve_serving_quick,
+    "targets": lambda **kw: target_sweep(quick=True, **kw),
 }
 
 
@@ -57,8 +63,12 @@ def main() -> None:
                     help="also write the collected rows to this JSON file")
     ap.add_argument("--quick", action="store_true",
                     help="reduced sizes/iterations where supported")
+    ap.add_argument("--targets", default=None,
+                    help="comma-separated target names for the `targets` "
+                         "section (default: every registered target)")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+    target_filter = args.targets.split(",") if args.targets else None
 
     print("name,us_per_call,derived")
     collected = {}
@@ -68,6 +78,8 @@ def main() -> None:
             continue
         if args.quick and section in _QUICK_SECTIONS:
             fn = _QUICK_SECTIONS[section]
+        if section == "targets":
+            fn = (lambda fn=fn: fn(only_targets=target_filter))
         try:
             for name, us, derived in fn():
                 print(f"{name},{us:.3f},{derived}")

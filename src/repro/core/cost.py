@@ -305,6 +305,101 @@ def simulate(trace: List[TraceEvent], cfg: MVEConfig,
 
 
 # ---------------------------------------------------------------------------
+# Energy model.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class EnergyParams:
+    """Energy component model (pJ) — one source of truth for the
+    benchmarks (:mod:`benchmarks.paper_claims`) and the pluggable target
+    API (:mod:`repro.targets`, docs/TARGETS.md).
+
+    The paper's qualitative claims — large energy wins from
+    instruction-count reduction + SRAM-local compute — are what the repo
+    validates, not absolute joules; these constants state the assumptions
+    in one documented place (they used to be module globals of
+    ``benchmarks/paper_claims.py``).
+
+    In-cache engine:
+
+    * ``e_array_cycle`` — per SRAM array per active compute cycle (two
+      wordline activations + peripheral logic, Neural-Cache-scale, 7nm);
+    * ``e_l2_byte`` — L2 data movement per byte over the in-situ
+      L2->TMU path (incl. the transpose write; no core round trip);
+    * ``e_issue`` — one MVE instruction issue/dispatch through the
+      controller.
+
+    Mobile core baseline (Neon / scalar):
+
+    * ``e_scalar`` — one OoO-core scalar instruction;
+    * ``e_simd_op`` — one 128-bit ASIMD operation;
+    * ``e_l1_byte`` — L1+L2+register-file round trip per byte.
+
+    Mobile GPU baseline: ``e_gpu_flop`` per int-MAC flop,
+    ``e_gpu_launch`` fixed per kernel launch, ``e_gpu_copy_byte`` per
+    byte copied into pinned unified memory.
+    """
+
+    e_array_cycle: float = 8.0
+    e_l2_byte: float = 8.0
+    e_issue: float = 50.0
+    e_scalar: float = 150.0
+    e_simd_op: float = 250.0
+    e_l1_byte: float = 25.0
+    e_gpu_flop: float = 2.5
+    e_gpu_launch: float = 2.0e7
+    e_gpu_copy_byte: float = 30.0
+
+
+DEFAULT_ENERGY = EnergyParams()
+
+
+@dataclasses.dataclass(frozen=True)
+class EnergyReport:
+    """Per-component energy (pJ) of one kernel execution on one target.
+
+    ``total_pj`` is stored (not derived) so models control their exact
+    summation order — the golden benchmark rows compare floats exactly.
+    """
+
+    compute_pj: float = 0.0
+    data_pj: float = 0.0
+    issue_pj: float = 0.0
+    scalar_pj: float = 0.0
+    total_pj: float = 0.0
+
+
+def mve_energy(tl: Timeline, cfg: MVEConfig, mem_bytes: float,
+               ep: EnergyParams | None = None) -> EnergyReport:
+    """Energy of one in-cache execution: array compute + L2 movement +
+    instruction issue + interleaved scalar work.  Shared by every
+    in-cache target (MVE under any compute scheme, and the RVV-driven
+    engine, which pays through its larger instruction counts)."""
+    ep = ep or DEFAULT_ENERGY
+    compute = tl.compute_cycles * cfg.num_arrays * ep.e_array_cycle
+    data = mem_bytes * ep.e_l2_byte
+    issue = (tl.vector_instructions + tl.config_instructions) * ep.e_issue
+    scalar = tl.scalar_instructions * ep.e_scalar
+    return EnergyReport(compute_pj=compute, data_pj=data, issue_pj=issue,
+                        scalar_pj=scalar,
+                        total_pj=compute + data + issue + scalar)
+
+
+def neon_energy(simd_ops: float, mem_bytes: float,
+                ep: EnergyParams | None = None) -> EnergyReport:
+    """Energy of a packed-SIMD execution: ``simd_ops`` 128-bit ASIMD ops
+    plus loop/address scalar overhead (0.5 scalar per SIMD op) plus the
+    L1 round trip for every byte."""
+    ep = ep or DEFAULT_ENERGY
+    scalar_ops = simd_ops * 0.5
+    compute = simd_ops * ep.e_simd_op
+    scalar = scalar_ops * ep.e_scalar
+    data = mem_bytes * ep.e_l1_byte
+    return EnergyReport(compute_pj=compute, data_pj=data, scalar_pj=scalar,
+                        total_pj=compute + scalar + data)
+
+
+# ---------------------------------------------------------------------------
 # Baseline cost models for comparison figures.
 # ---------------------------------------------------------------------------
 

@@ -571,6 +571,11 @@ _CACHE_CAPACITY = 256
 _CACHE_LOCK = threading.RLock()   # submit() may compile from many threads
 _HITS = _MISSES = _EVICTIONS = 0
 _VM_FALLBACKS = 0
+# Per-target LRU counters: cache_tag -> [hits, misses].  Tagged compiles
+# (one tag per :mod:`repro.targets` target) get their own key space, so
+# an RVV or Neon compilation of a program never aliases — or evicts in
+# place of — the MVE entry for the same text.
+_TAG_COUNTS: Dict[str, List[int]] = {}
 
 #: Default execution mode: ``"vm"`` (program-as-data datapath, one XLA
 #: compilation per signature) or ``"fused"`` (one jitted function per
@@ -591,18 +596,28 @@ class EngineCacheInfo:
     vm_signatures: int         # distinct VM executables alive
     vm_hits: int               # VM executor-cache hits
     vm_xla_compiles: int       # distinct VM XLA compilations (incl. batch)
+    # cache_tag -> {"hits": n, "misses": n} for target-tagged compiles
+    # (docs/TARGETS.md); untagged compiles count only in the totals above.
+    per_target: Dict[str, Dict[str, int]] = dataclasses.field(
+        default_factory=dict)
 
 
 def cache_info() -> EngineCacheInfo:
     """Hit/miss/eviction counters for the program LRU plus the VM
     signature-keyed executable cache — the observability handle for the
-    "compile the machine once" contract (docs/ENGINE.md)."""
+    "compile the machine once" contract (docs/ENGINE.md).  ``per_target``
+    breaks the LRU counters down by compile tag, one per registered
+    :mod:`repro.targets` target that has compiled anything."""
     v = _vm_cache_info()
+    with _CACHE_LOCK:
+        per_target = {tag: {"hits": c[0], "misses": c[1]}
+                      for tag, c in _TAG_COUNTS.items()}
     return EngineCacheInfo(
         program_hits=_HITS, program_misses=_MISSES,
         program_evictions=_EVICTIONS, program_size=len(_CACHE),
         vm_fallbacks=_VM_FALLBACKS, vm_signatures=v.signatures,
-        vm_hits=v.hits, vm_xla_compiles=v.xla_compiles)
+        vm_hits=v.hits, vm_xla_compiles=v.xla_compiles,
+        per_target=per_target)
 
 
 def _attach_kernel(cp: CompiledProgram, kernel) -> CompiledProgram:
@@ -633,9 +648,18 @@ def _attach_kernel(cp: CompiledProgram, kernel) -> CompiledProgram:
     return cp
 
 
+def _count_tag(tag: Optional[str], hit: bool) -> None:
+    """Record a tagged LRU hit/miss (caller holds ``_CACHE_LOCK``)."""
+    if tag is None:
+        return
+    counts = _TAG_COUNTS.setdefault(tag, [0, 0])
+    counts[0 if hit else 1] += 1
+
+
 def compile_program(program: isa.Program,
                     cfg: MVEConfig | None = None,
-                    mode: str | None = None) -> CompiledProgram:
+                    mode: str | None = None,
+                    cache_tag: Optional[str] = None) -> CompiledProgram:
     """Compile (with caching) an MVE program for the given machine config.
 
     Accepts a raw instruction sequence or a frontend
@@ -651,6 +675,12 @@ def compile_program(program: isa.Program,
     program with the same signature; ``"fused"`` emits one jitted function
     per program.  Programs the VM cannot host fall back to fused
     (``cache_info().vm_fallbacks``).
+
+    ``cache_tag`` namespaces the LRU key: compilations made on behalf of
+    one :mod:`repro.targets` target (the target's name) never alias —
+    or compete in LRU order with — another target's entries for the same
+    program text, and ``cache_info().per_target`` reports hits/misses
+    per tag.
     """
     global _HITS, _MISSES, _EVICTIONS
     cfg = cfg or MVEConfig()
@@ -661,11 +691,12 @@ def compile_program(program: isa.Program,
     if hasattr(program, "plan") and hasattr(program, "program"):
         kernel = program            # a frontend Kernel (duck-typed:
         program = kernel.program    # no core -> frontend import cycle)
-    key = (tuple(program), cfg, mode)
+    key = (tuple(program), cfg, mode, cache_tag)
     with _CACHE_LOCK:
         cp = _CACHE.get(key)
         if cp is not None:
             _HITS += 1
+            _count_tag(cache_tag, hit=True)
             _CACHE.move_to_end(key)
             return _attach_kernel(cp, kernel)
     # Construct outside the lock: a multi-ms compile walk must not stall
@@ -677,16 +708,18 @@ def compile_program(program: isa.Program,
         cp = _CACHE.get(key)
         if cp is not None:
             _HITS += 1
+            _count_tag(cache_tag, hit=True)
             _CACHE.move_to_end(key)
             return _attach_kernel(cp, kernel)
         _MISSES += 1
+        _count_tag(cache_tag, hit=False)
         cp = _CACHE[key] = built
         _attach_kernel(cp, kernel)
         if cp.mode != mode:
             # VM-unsupported fallback: alias the fused key too, so an
             # explicit mode="fused" request reuses this compilation
             # instead of walking and tracing the same program again.
-            _CACHE.setdefault((key[0], key[1], cp.mode), cp)
+            _CACHE.setdefault((key[0], key[1], cp.mode, cache_tag), cp)
         while len(_CACHE) > _CACHE_CAPACITY:
             _CACHE.popitem(last=False)
             _EVICTIONS += 1
@@ -700,5 +733,6 @@ def clear_cache() -> None:
     global _HITS, _MISSES, _EVICTIONS, _VM_FALLBACKS
     with _CACHE_LOCK:
         _CACHE.clear()
+        _TAG_COUNTS.clear()
         _HITS = _MISSES = _EVICTIONS = 0
         _VM_FALLBACKS = 0

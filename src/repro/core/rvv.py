@@ -14,8 +14,15 @@ instructions are needed to compute the mask").
 
 This module *compiles* the MVE memory instructions of a program into that
 1D form, producing a trace that runs through the same cost model.  Results
-remain bit-exact with MVE (it is the same access, sliced) — asserted in
-tests — while the dynamic instruction counts and timeline differ.
+remain bit-exact with MVE (it is the same access, sliced) — a first-class
+invariant asserted across executors in ``tests/test_conformance.py`` and
+``tests/test_targets.py`` — while the dynamic instruction counts and
+timeline differ.
+
+This lowering is the performance adapter behind the ``rvv-1d`` target of
+:mod:`repro.targets` (docs/TARGETS.md): execution goes through the shared
+functional engine, and :func:`compile_to_rvv` prices the same program as
+a 1D ISA would issue it.
 """
 from __future__ import annotations
 
@@ -39,10 +46,17 @@ class RVVStats:
     memory_instructions: int = 0
     scalar_instructions: int = 0
     config_instructions: int = 0
+    # One entry per lowered memory instruction:
+    # ``(segments, inner_len, active_lanes)`` — the Section III-C
+    # decomposition ``segments = ceil(active_lanes / inner_len)`` (times
+    # the pointer count for random-base accesses).  Tested as an exact
+    # invariant against the emitted trace in ``tests/test_conformance.py``.
+    segment_log: List[Tuple[int, int, int]] = dataclasses.field(
+        default_factory=list)
 
 
-def _segments_for(ctrl: ControlState, instr: Instr, lanes: int
-                  ) -> Tuple[int, int]:
+def segments_for(ctrl: ControlState, instr: Instr, lanes: int
+                 ) -> Tuple[int, int]:
     """(#partial accesses, 1D segment length) for one memory instruction.
 
     RVV has ONE flexible stride per access (Table I), so a competent 1D
@@ -139,7 +153,8 @@ def compile_to_rvv(program: isa.Program, cfg: MVEConfig | None = None
         cbm = cbs_touched(dims, ctrl.dim_mask, cfg)
 
         if op in isa.MEMORY_OPS:
-            segments, inner = _segments_for(ctrl, instr, cfg.lanes)
+            segments, inner = segments_for(ctrl, instr, cfg.lanes)
+            stats.segment_log.append((segments, inner, elements))
             per_seg_elems = max(1, elements // max(segments, 1))
             for _ in range(segments):
                 # scalar address computation for this segment's base

@@ -250,24 +250,41 @@ class Kernel:                         # the engine can track attachments
         return True
 
     # -- execution ---------------------------------------------------------
-    def compile(self, cfg=None, mode: Optional[str] = None):
-        """The cached :class:`~repro.core.engine.CompiledProgram`."""
+    def compile(self, cfg=None, mode: Optional[str] = None,
+                target: Optional[object] = None):
+        """The cached :class:`~repro.core.engine.CompiledProgram` — or,
+        with ``target=`` (a registered name like ``"rvv-1d"`` or a
+        :class:`~repro.targets.Target`), the uniform
+        :class:`~repro.targets.CompiledArtifact` exposing
+        ``run``/``run_batch``/``timeline``/``energy``/
+        ``instruction_mix`` under that target's cost models
+        (docs/TARGETS.md).  The kernel runs unchanged on every target."""
+        if target is not None:
+            from ..targets import compile as compile_for_target
+            return compile_for_target(self, target=target, cfg=cfg,
+                                      mode=mode)
         from ..core.engine import compile_program
         return compile_program(self, cfg, mode=mode)
 
     def run(self, operands: Optional[Dict[str, np.ndarray]] = None,
-            cfg=None, mode: Optional[str] = None):
+            cfg=None, mode: Optional[str] = None,
+            target: Optional[object] = None):
         """Execute once; returns ``(outputs, state)`` with outputs read
-        back by name (every non-scratch operand)."""
-        mem_after, state = self.compile(cfg, mode).run(self.pack(operands))
+        back by name (every non-scratch operand).  ``target=`` executes
+        through :mod:`repro.targets` (identical results on every
+        target; ``state`` then prices under that target via
+        ``kernel.compile(target=...).timeline(state)``)."""
+        mem_after, state = self.compile(cfg, mode, target).run(
+            self.pack(operands))
         return self.unpack(mem_after), state
 
     def run_batch(self, operand_batches: Dict[str, np.ndarray],
-                  cfg=None, mode: Optional[str] = None):
+                  cfg=None, mode: Optional[str] = None,
+                  target: Optional[object] = None):
         """Vmapped execution over a leading batch axis per operand
         (missing operands broadcast their declared init)."""
         mems = self.pack_batch(operand_batches)
-        mem_after, _, _ = self.compile(cfg, mode).run_batch(mems)
+        mem_after, _, _ = self.compile(cfg, mode, target).run_batch(mems)
         return self.unpack(np.asarray(mem_after))
 
     def dump(self) -> str:

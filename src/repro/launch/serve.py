@@ -211,12 +211,14 @@ class MVEProgramServer:
         self._inflight: "OrderedDict[int, ProgramRequest]" = OrderedDict()
         self._done: "OrderedDict[int, ProgramRequest]" = OrderedDict()
 
-    def submit(self, program, memory=None) -> ProgramRequest:
+    def submit(self, program, memory=None, target=None) -> ProgramRequest:
         """Accepts a raw ``(program, memory)`` pair or a frontend
         :class:`~repro.frontend.Kernel` plus named operand arrays — the
         same overloads as :meth:`MVEScheduler.submit`; kernel requests
-        read results back by name (``req.result.operands``)."""
-        ticket = self.scheduler.submit(program, memory)
+        read results back by name (``req.result.operands``).  ``target``
+        selects a registered :mod:`repro.targets` target (unknown names
+        raise a ``ProgramError`` listing what is registered)."""
+        ticket = self.scheduler.submit(program, memory, target=target)
         with self._lock:
             req = ProgramRequest(rid=self._next_rid,
                                  program=ticket.program,

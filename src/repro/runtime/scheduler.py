@@ -33,6 +33,13 @@ Scheduling policy (docs/SERVING.md has the design note):
   (``run_batch_async`` / ``run_async``); the scheduler syncs once per
   cycle, not once per request.
 
+Targets: ``submit(..., target="rvv-1d")`` accepts any registered
+:mod:`repro.targets` target — requests bucket per target (compilations
+are tagged so one target's entries never alias another's) and the
+resolved machine config rides on the ticket; unknown or
+geometry-mismatched targets raise a readable
+:class:`~repro.core.isa.ProgramError` (docs/TARGETS.md).
+
 Determinism: with ``background=False`` (default) nothing executes until
 :meth:`MVEScheduler.drain`, which processes every pending request on the
 calling thread — submission order decides batch composition, so tests
@@ -120,12 +127,16 @@ class Ticket:
     """Future-like handle returned by :meth:`MVEScheduler.submit`."""
 
     def __init__(self, rid: int, program, memory, cp: CompiledProgram,
-                 submitted_at: Optional[float] = None, kernel=None):
+                 submitted_at: Optional[float] = None, kernel=None,
+                 cfg: Optional[MVEConfig] = None,
+                 target: Optional[str] = None):
         self.rid = rid
         self.program = program
         self.memory = memory
         self.cp = cp
         self.kernel = kernel
+        self.cfg = cfg                 # machine config this request runs under
+        self.target = target           # registered target name (None=default)
         self.submitted_at = submitted_at if submitted_at is not None \
             else time.perf_counter()
         self.done_at: Optional[float] = None
@@ -227,7 +238,31 @@ class MVEScheduler:
             self._worker.start()
 
     # -- client API --------------------------------------------------------
-    def submit(self, program: isa.Program, memory=None) -> Ticket:
+    def _resolve_target(self, target) -> Tuple[MVEConfig, Optional[str]]:
+        """(machine config, cache tag) for one submission's target.
+
+        Unknown names raise :class:`~repro.core.isa.ProgramError` naming
+        every registered target; a target whose machine geometry cannot
+        share this scheduler's lane/CB layout is rejected the same way —
+        both used to surface as ``KeyError``-shaped internal failures.
+        """
+        if target is None:
+            return self.cfg, None
+        from .. import targets as _targets
+        tgt = _targets.get_target(target)      # ProgramError when unknown
+        cfg = tgt.machine_config(self.cfg)
+        if (cfg.lanes, cfg.num_cbs) != (self.cfg.lanes, self.cfg.num_cbs):
+            raise isa.ProgramError(
+                f"target {tgt.name!r} needs machine geometry "
+                f"(lanes={cfg.lanes}, cbs={cfg.num_cbs}) but this "
+                f"scheduler batches for (lanes={self.cfg.lanes}, "
+                f"cbs={self.cfg.num_cbs}); submit it to a scheduler "
+                f"built with that geometry.  Registered targets: "
+                f"{', '.join(_targets.list_targets())}")
+        return cfg, tgt.name
+
+    def submit(self, program: isa.Program, memory=None,
+               target=None) -> Ticket:
         """Enqueue one program execution; returns a :class:`Ticket`.
 
         ``program`` is a raw instruction sequence plus a flat memory
@@ -236,9 +271,20 @@ class MVEScheduler:
         kernel submissions read results back by name through
         ``ticket.result().operands``.
 
+        ``target`` selects a registered :mod:`repro.targets` target (a
+        name or instance).  Execution is bit-identical on every target —
+        the scheduler's value per target is *bucketing*: requests are
+        grouped per target (so per-target compilations never alias,
+        ``cache_info().per_target``) and the resolved machine config
+        rides on the ticket for downstream pricing.  Unknown or
+        geometry-mismatched targets raise a
+        :class:`~repro.core.isa.ProgramError` naming the registered
+        targets.
+
         Thread-safe; callable from any number of client threads.  In
         deterministic mode nothing runs until :meth:`drain`."""
         submitted_at = time.perf_counter()   # before the (cold) compile
+        cfg, tag = self._resolve_target(target)
         kernel = None
         if hasattr(program, "plan") and hasattr(program, "program"):
             kernel = program
@@ -248,14 +294,16 @@ class MVEScheduler:
             program = kernel.program
         elif memory is None:
             raise TypeError("raw program submissions need a memory image")
-        cp = compile_program(kernel or program, self.cfg, mode=self.mode)
+        cp = compile_program(kernel or program, cfg, mode=self.mode,
+                             cache_tag=tag)
         t = Ticket(next(self._rid), tuple(program), memory, cp,
-                   submitted_at=submitted_at, kernel=kernel)
+                   submitted_at=submitted_at, kernel=kernel,
+                   cfg=cfg, target=tag)
         with self._lock:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
             self.stats.requests += 1
-            pk = (t.program, self.cfg)
+            pk = (t.program, cfg, tag)
             self._seen[pk] = self._seen.get(pk, 0) + 1
             self._seen.move_to_end(pk)
             while len(self._seen) > _SEEN_CAP:
@@ -341,7 +389,11 @@ class MVEScheduler:
         buckets: "OrderedDict[tuple, OrderedDict[tuple, List[Ticket]]]" = \
             OrderedDict()
         for t in batch:
-            key = t.cp.batch_group_key(t.memory)
+            # Per-target signature bucketing: the leading tag keeps one
+            # target's groups from stacking with another's even when the
+            # VM signature coincides (their cost models differ; pricing
+            # rides on the ticket's target).
+            key = (t.target,) + tuple(t.cp.batch_group_key(t.memory))
             gkey = (t.program, key)
             buckets.setdefault(key, OrderedDict()).setdefault(
                 gkey, []).append(t)
@@ -353,14 +405,14 @@ class MVEScheduler:
         for key, groups in buckets.items():
             # Same signature bucket back to back: every VM group replays
             # through the same signature-keyed executable while it is hot.
-            # Only VM-routed requests (key[0]) get the VM-tier batch cap;
-            # fused-routed ones (non-float32-canonical images, VM
-            # fallbacks) batch at the full fused cap.
-            routed_vm = key[0] == "vm"
+            # Only VM-routed requests (key[1], after the target tag) get
+            # the VM-tier batch cap; fused-routed ones
+            # (non-float32-canonical images, VM fallbacks) batch at the
+            # full fused cap.
+            routed_vm = key[1] == "vm"
             for (prog, _), tickets in groups.items():
                 try:
-                    fused = self._promotable((prog, self.cfg),
-                                             tickets[0].cp)
+                    fused = self._promotable(tickets[0])
                 except BaseException as e:
                     for t in tickets:
                         t._resolve(error=e)
@@ -447,19 +499,25 @@ class MVEScheduler:
             return out
         return tickets, tier, fin_batch
 
-    def _promotable(self, pk, cp) -> Optional[CompiledProgram]:
+    def _promotable(self, ticket: Ticket) -> Optional[CompiledProgram]:
         """The fused-tier executable for a hot program, compiling it on
         first promotion; ``None`` while the program stays in the VM tier
-        (or when promotion is off / the program already runs fused)."""
+        (or when promotion is off / the program already runs fused).
+        Promotion heat and the fused compilation are both per
+        ``(program, config, target)`` — one target's promotion never
+        serves (or evicts) another's."""
+        cp = ticket.cp
         if self.promote_after is None or cp.mode == "fused":
             return None
+        pk = (ticket.program, ticket.cfg, ticket.target)
         hot = self._promoted.get(pk)
         if hot is not None:
             self._promoted.move_to_end(pk)
             return hot
         if self._seen.get(pk, 0) < self.promote_after:
             return None
-        hot = compile_program(list(pk[0]), self.cfg, mode="fused")
+        hot = compile_program(list(pk[0]), ticket.cfg, mode="fused",
+                              cache_tag=ticket.target)
         self._promoted[pk] = hot
         while len(self._promoted) > _PROMOTED_CAP:
             self._promoted.popitem(last=False)

@@ -1,0 +1,318 @@
+"""The pluggable Target API (:mod:`repro.targets`, docs/TARGETS.md).
+
+Covers the acceptance contract of the targets redesign:
+
+* ``repro.targets.compile(kernel_or_program, target=t)`` works for every
+  registered target on every Section-IV pattern with **bit-exact**
+  results across targets (and against the stepwise interpreter oracle);
+* the uniform :class:`CompiledArtifact` surface — run / run_batch /
+  trace / timeline / energy / instruction_mix;
+* the registry (unknown names raise a :class:`ProgramError` naming what
+  is registered; ``register_target`` refuses silent overwrites);
+* per-target compile-cache keys (``cache_info().per_target``) — RVV/Neon
+  compilations never alias MVE LRU entries;
+* target-aware scheduling: per-target bucketing, promotion, and the
+  readable errors for unknown / geometry-mismatched targets.
+"""
+import numpy as np
+import pytest
+
+from repro import targets
+from repro.core import MVEConfig, MVEInterpreter, cache_info
+from repro.core.isa import ProgramError
+from repro.core.patterns import PATTERNS
+from repro.runtime.scheduler import MVEScheduler
+
+CFG = MVEConfig()
+ORACLE = MVEInterpreter(CFG, compiled=False)
+ALL_BUILTIN = ("mve-bs", "mve-bp", "mve-bh", "mve-ac", "rvv-1d", "neon")
+
+
+def _assert_state_equal(st_a, st_b):
+    assert set(st_a.regs) == set(st_b.regs)
+    for r in st_a.regs:
+        np.testing.assert_array_equal(np.asarray(st_a.regs[r]),
+                                      np.asarray(st_b.regs[r]))
+    np.testing.assert_array_equal(np.asarray(st_a.tag),
+                                  np.asarray(st_b.tag))
+
+
+# ---------------------------------------------------------------------------
+# The cross-target bit-exactness invariant (the RVV path is the same
+# access, sliced — first-class and tested, not a docstring claim).
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_all_patterns_bit_exact_on_every_target(name):
+    run = PATTERNS[name]()
+    mem_i, st_i = ORACLE.run_stepwise(run.program, run.memory)
+    mem_i = np.asarray(mem_i)
+    for tname in ALL_BUILTIN:
+        art = targets.compile(run.program, target=tname)
+        mem_t, st_t = art.run(run.memory)
+        np.testing.assert_array_equal(
+            np.asarray(mem_t), mem_i,
+            err_msg=f"{tname} diverged from the oracle on {name}")
+        _assert_state_equal(st_i, st_t)
+        run.check(np.asarray(mem_t), st_t)
+
+
+def test_registry_contents_and_default():
+    names = targets.list_targets()
+    for required in ALL_BUILTIN:
+        assert required in names
+    assert targets.DEFAULT_TARGET == "mve-bs"
+    assert targets.get_target("mve-bs") is targets.MVE_BS
+    # instances pass through
+    assert targets.get_target(targets.RVV_1D) is targets.RVV_1D
+
+
+def test_unknown_target_names_registered_ones():
+    with pytest.raises(ProgramError) as ei:
+        targets.get_target("sve-2d")
+    msg = str(ei.value)
+    for name in ALL_BUILTIN:
+        assert name in msg
+
+
+def test_register_target_rejects_silent_overwrite():
+    custom = targets.InCacheTarget("bs-test-dup", scheme="bs")
+    try:
+        targets.register_target(custom)
+        with pytest.raises(ProgramError):
+            targets.register_target(
+                targets.InCacheTarget("bs-test-dup", scheme="bp"))
+        replacement = targets.InCacheTarget("bs-test-dup", scheme="bp")
+        assert targets.register_target(replacement, overwrite=True) \
+            is replacement
+        with pytest.raises(TypeError):
+            targets.register_target("not-a-target")
+    finally:
+        targets.base._REGISTRY.pop("bs-test-dup", None)
+
+
+def test_third_party_scheme_registration_end_to_end():
+    """The extension story: register a custom scheme, compile, run,
+    price — then it also serves through the scheduler by name."""
+    wide_bh = targets.InCacheTarget(
+        "bh8-test", scheme="bh", description="EVE with 8-bit segments",
+        config_overrides=(("bh_segment_bits", 8),))
+    try:
+        targets.register_target(wide_bh)
+        run = PATTERNS["daxpy"]()
+        art = targets.compile(run.program, target="bh8-test")
+        assert art.cfg.scheme == "bh" and art.cfg.bh_segment_bits == 8
+        mem_t, st = art.run(run.memory)
+        run.check(np.asarray(mem_t), st)
+        assert art.timeline(st).total_cycles > 0
+        sched = MVEScheduler(CFG)
+        ticket = sched.submit(run.program, run.memory, target="bh8-test")
+        sched.drain()
+        run.check(np.asarray(ticket.result().memory), ticket.result())
+    finally:
+        targets.base._REGISTRY.pop("bh8-test", None)
+
+
+# ---------------------------------------------------------------------------
+# The uniform artifact surface.
+# ---------------------------------------------------------------------------
+
+def test_artifact_surface_timeline_energy_mix():
+    run = PATTERNS["gemm"]()
+    mve = targets.compile(run.program, target="mve-bs")
+    rvv = targets.compile(run.program, target="rvv-1d")
+    neon = targets.compile(run.program, target="neon")
+    _, state = mve.run(run.memory)
+
+    tl_m, tl_r, tl_n = (a.timeline(state) for a in (mve, rvv, neon))
+    # gemm is multi-dimensional: the 1D lowering must cost more cycles
+    assert tl_r.total_cycles > tl_m.total_cycles
+    assert tl_n.total_cycles > 0
+    for tl in (tl_m, tl_r, tl_n):
+        assert tl.total_cycles > 0 and tl.compute_cycles > 0
+
+    mix_m, mix_r = mve.instruction_mix(), rvv.instruction_mix()
+    assert mix_r.vector > mix_m.vector        # Figure 11 ordering
+    assert mix_r.scalar > mix_m.scalar
+    assert mix_m.total > 0
+
+    for art in (mve, rvv, neon):
+        e = art.energy(state)
+        assert e.total_pj > 0
+        assert e.total_pj == pytest.approx(
+            e.compute_pj + e.data_pj + e.issue_pj + e.scalar_pj)
+        assert art.us(state) > 0
+
+    # rvv performance trace is a different issue stream over the same work
+    assert len(rvv.trace(state)) > len(mve.trace(state))
+
+
+def test_artifact_static_vs_executed_pricing():
+    """source=None prices the static trace; an execution state or a raw
+    memory image price the exact run (identical for strided patterns)."""
+    run = PATTERNS["daxpy"]()
+    art = targets.compile(run.program, target="mve-bs")
+    _, state = art.run(run.memory)
+    static = art.timeline().total_cycles
+    exact = art.timeline(state).total_cycles
+    from_mem = art.timeline(run.memory).total_cycles
+    assert static == exact == from_mem
+
+
+def test_artifact_kernel_named_operands_and_batch():
+    run = PATTERNS["daxpy"]()
+    art = targets.compile(run.kernel, target="mve-bp")
+    assert art.kernel is run.kernel
+    mem_t, state = art.run()          # declared inits form the image
+    assert sorted(state.operands) == ["x", "y"]
+    run.check(np.asarray(mem_t), state)
+
+    mems = np.stack([run.kernel.pack(), run.kernel.pack()])
+    bmem, _, _ = art.run_batch(mems)
+    np.testing.assert_array_equal(np.asarray(bmem)[0],
+                                  np.asarray(bmem)[1])
+    np.testing.assert_array_equal(np.asarray(bmem)[0], np.asarray(mem_t))
+
+
+def test_artifact_raw_program_requires_memory():
+    run = PATTERNS["daxpy"]()
+    art = targets.compile(run.program, target="mve-bs")
+    with pytest.raises(TypeError):
+        art.run()
+
+
+def test_config_overrides_flow_through():
+    run = PATTERNS["daxpy"]()
+    art = targets.compile(run.program, target="mve-bs", num_arrays=8)
+    assert art.cfg.lanes == 8 * 256
+    base = targets.compile(run.program, target="mve-bs")
+    assert base.cfg.lanes == CFG.lanes
+    # an explicit cfg is the base the target patches its scheme onto
+    art2 = targets.compile(run.program, target="mve-bh",
+                           cfg=MVEConfig(num_arrays=16))
+    assert art2.cfg.scheme == "bh" and art2.cfg.num_arrays == 16
+
+
+def test_per_target_cache_keys_never_alias():
+    run = PATTERNS["reduction"]()
+    before = cache_info()
+    a = targets.compile(run.program, target="mve-bs")
+    b = targets.compile(run.program, target="rvv-1d")
+    c = targets.compile(run.program, target="rvv-1d")
+    assert a.cp is not b.cp          # distinct LRU entries per target
+    assert b.cp is c.cp              # ... but cached within one target
+    after = cache_info()
+    assert after.per_target["rvv-1d"]["hits"] >= 1
+    assert after.per_target["rvv-1d"]["misses"] >= 1
+    assert after.per_target["mve-bs"]["misses"] > \
+        before.per_target.get("mve-bs", {}).get("misses", 0) - 1
+
+
+def test_smoke_entry_point():
+    cycles = targets.smoke("xor_cipher")
+    assert set(cycles) >= set(ALL_BUILTIN)
+    assert all(c > 0 for c in cycles.values())
+
+
+# ---------------------------------------------------------------------------
+# Target-aware scheduling / serving.
+# ---------------------------------------------------------------------------
+
+def test_scheduler_submit_target_bit_exact_and_bucketed():
+    runs = [PATTERNS["alpha_blend"](seed=s) for s in range(3)]
+    sched = MVEScheduler(CFG, promote_after=None)
+    t_def = [sched.submit(r.program, r.memory) for r in runs]
+    t_rvv = [sched.submit(r.program, r.memory, target="rvv-1d")
+             for r in runs]
+    sched.drain()
+    for r, td, tr in zip(runs, t_def, t_rvv):
+        np.testing.assert_array_equal(np.asarray(td.result().memory),
+                                      np.asarray(tr.result().memory))
+        r.check(np.asarray(tr.result().memory), tr.result())
+    # per-target bucketing: same program, two targets -> two dispatches
+    assert sched.stats.dispatches == 2
+    assert sched.stats.batched_requests == 6
+
+
+def test_scheduler_promotion_is_per_target():
+    runs = [PATTERNS["daxpy"](seed=s) for s in range(4)]
+    sched = MVEScheduler(CFG, promote_after=2)
+    for r in runs[:2]:
+        sched.submit(r.program, r.memory)
+        sched.submit(r.program, r.memory, target="mve-bp")
+    sched.drain()
+    for r in runs[2:]:
+        sched.submit(r.program, r.memory)
+        sched.submit(r.program, r.memory, target="mve-bp")
+    sched.drain()
+    # both targets crossed promote_after independently
+    assert sched.stats.promotions == 2
+
+
+def test_scheduler_unknown_target_is_a_program_error():
+    run = PATTERNS["daxpy"]()
+    sched = MVEScheduler(CFG)
+    with pytest.raises(ProgramError) as ei:
+        sched.submit(run.program, run.memory, target="mve-zz")
+    assert "registered targets" in str(ei.value)
+    assert "rvv-1d" in str(ei.value)
+    assert sched.stats.requests == 0       # rejected before enqueue
+
+
+def test_scheduler_geometry_mismatch_is_a_program_error():
+    small = targets.InCacheTarget(
+        "tiny-bs-test", scheme="bs",
+        config_overrides=(("num_arrays", 8),))
+    try:
+        targets.register_target(small)
+        run = PATTERNS["daxpy"]()
+        sched = MVEScheduler(CFG)
+        with pytest.raises(ProgramError) as ei:
+            sched.submit(run.program, run.memory, target="tiny-bs-test")
+        msg = str(ei.value)
+        assert "lanes=2048" in msg and "lanes=8192" in msg
+        assert "registered targets" in msg.lower() \
+            or "Registered targets" in msg
+        # ... and a scheduler built for that geometry accepts it
+        small_cfg = small.machine_config()
+        sched2 = MVEScheduler(small_cfg)
+        r = PATTERNS["daxpy"](n=small_cfg.lanes)
+        t = sched2.submit(r.program, r.memory, target="tiny-bs-test")
+        sched2.drain()
+        r.check(np.asarray(t.result().memory), t.result())
+    finally:
+        targets.base._REGISTRY.pop("tiny-bs-test", None)
+
+
+def test_program_server_submit_target():
+    from repro.launch.serve import MVEProgramServer
+    run = PATTERNS["rgb2gray"]()
+    srv = MVEProgramServer()
+    req = srv.submit(run.program, run.memory, target="neon")
+    srv.run_until_drained()
+    run.check(np.asarray(req.result.memory), req.result)
+    with pytest.raises(ProgramError):
+        srv.submit(run.program, run.memory, target="cuda")
+
+
+# ---------------------------------------------------------------------------
+# Frontend integration: one @mve.kernel, every target.
+# ---------------------------------------------------------------------------
+
+def test_kernel_compile_and_run_per_target():
+    run = PATTERNS["audio_mix"]()
+    k = run.kernel
+    ref = None
+    for tname in ALL_BUILTIN:
+        art = k.compile(target=tname)
+        assert isinstance(art, targets.CompiledArtifact)
+        out, state = k.run(target=tname)
+        got = {n: np.asarray(v) for n, v in out.items()}
+        if ref is None:
+            ref = got
+        else:
+            for n in ref:
+                np.testing.assert_array_equal(got[n], ref[n])
+    # default (no target) keeps returning the engine CompiledProgram
+    from repro.core.engine import CompiledProgram
+    assert isinstance(k.compile(), CompiledProgram)
