@@ -23,6 +23,7 @@ from . import paper_claims
 from .engine_bench import engine_vs_interp
 from .frontend_bench import frontend_overhead, frontend_overhead_quick
 from .kernels_bench import kernel_microbench
+from .opt_bench import opt_report
 from .roofline import roofline_rows
 from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
 from .targets_bench import target_sweep
@@ -31,6 +32,7 @@ SECTIONS = {
     "engine": engine_vs_interp,
     "frontend": frontend_overhead,
     "targets": target_sweep,
+    "opt": opt_report,
     "table2": paper_claims.table2_latencies,
     "fig7": paper_claims.fig7_neon,
     "fig8": paper_claims.fig8_gpu,
@@ -50,6 +52,7 @@ SECTIONS = {
 _QUICK_SECTIONS = {
     "engine": lambda: engine_vs_interp(iters=1, quick=True),
     "frontend": frontend_overhead_quick,
+    "opt": lambda: opt_report(quick=True),
     "serving": mve_serving_quick,
     "targets": lambda **kw: target_sweep(quick=True, **kw),
 }

@@ -659,7 +659,8 @@ def _count_tag(tag: Optional[str], hit: bool) -> None:
 def compile_program(program: isa.Program,
                     cfg: MVEConfig | None = None,
                     mode: str | None = None,
-                    cache_tag: Optional[str] = None) -> CompiledProgram:
+                    cache_tag: Optional[str] = None,
+                    opt_level: Optional[int] = None) -> CompiledProgram:
     """Compile (with caching) an MVE program for the given machine config.
 
     Accepts a raw instruction sequence or a frontend
@@ -681,6 +682,11 @@ def compile_program(program: isa.Program,
     or compete in LRU order with — another target's entries for the same
     program text, and ``cache_info().per_target`` reports hits/misses
     per tag.
+
+    ``opt_level`` (default ``None`` = no optimization) runs the program
+    through the :mod:`repro.opt` pass pipeline before compilation — the
+    optimized text is just another program, so caching, signatures and
+    executors compose unchanged (docs/OPTIMIZER.md).
     """
     global _HITS, _MISSES, _EVICTIONS
     cfg = cfg or MVEConfig()
@@ -691,6 +697,9 @@ def compile_program(program: isa.Program,
     if hasattr(program, "plan") and hasattr(program, "program"):
         kernel = program            # a frontend Kernel (duck-typed:
         program = kernel.program    # no core -> frontend import cycle)
+    if opt_level:
+        from .. import opt          # late: opt sits above core
+        program = opt.optimize(program, level=opt_level)
     key = (tuple(program), cfg, mode, cache_tag)
     with _CACHE_LOCK:
         cp = _CACHE.get(key)

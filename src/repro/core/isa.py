@@ -117,6 +117,36 @@ MOVE_OPS = {Op.CVT, Op.CPY}
 VECTOR_OPS = MEMORY_OPS | ARITH_OPS | MOVE_OPS
 
 
+def reg_defs(instr: "Instr") -> Optional[int]:
+    """The register this instruction writes, or ``None``.
+
+    Compares write the Tag latch, not a register; stores and config ops
+    write no register.  Shared by the register allocator
+    (:mod:`repro.frontend.regalloc`) and the optimizer's dependence
+    graph (:mod:`repro.opt`).
+    """
+    op = instr.op
+    if op in (Op.SLD, Op.RLD) or (
+            op in ARITH_OPS and op not in COMPARE_OPS) or op in MOVE_OPS:
+        return instr.vd
+    return None
+
+
+def reg_uses(instr: "Instr") -> Tuple[int, ...]:
+    """The registers this instruction reads, in operand order."""
+    op = instr.op
+    if op in (Op.SST, Op.RST):
+        return (instr.vs1,) if instr.vs1 is not None else ()
+    if op in VECTOR_OPS:
+        uses = []
+        if instr.vs1 is not None:
+            uses.append(instr.vs1)
+        if instr.vs2 is not None:
+            uses.append(instr.vs2)
+        return tuple(uses)
+    return ()
+
+
 @dataclasses.dataclass(frozen=True)
 class Instr:
     """One MVE instruction.

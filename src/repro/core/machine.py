@@ -204,6 +204,47 @@ def apply_config(ctrl: ControlState, instr: Instr) -> None:
         raise ValueError(f"not a config op: {op}")
 
 
+def config_cell(instr: Instr) -> Tuple:
+    """The control-register *cell* a config instruction writes.
+
+    Cells are the unit of the optimizer's dead-config analysis and the
+    frontend's duplicate-emission suppression: two writes touch the same
+    architectural state iff they have the same cell.
+    """
+    op = instr.op
+    if op is Op.SET_DIMC:
+        return ("dimc",)
+    if op is Op.SET_DIML:
+        return ("diml", instr.dim)
+    if op is Op.SET_LDSTR:
+        return ("ldstr", instr.dim)
+    if op is Op.SET_STSTR:
+        return ("ststr", instr.dim)
+    if op in (Op.SET_MASK, Op.UNSET_MASK):
+        return ("mask", instr.mask_index)
+    if op is Op.SET_WIDTH:
+        return ("width",)
+    raise ValueError(f"not a config op: {op}")
+
+
+def read_config_cell(ctrl: ControlState, cell: Tuple):
+    """Current value of one config cell (see :func:`config_cell`)."""
+    kind = cell[0]
+    if kind == "dimc":
+        return ctrl.dim_count
+    if kind == "diml":
+        return ctrl.dim_lens[cell[1]]
+    if kind == "ldstr":
+        return ctrl.ld_strides[cell[1]]
+    if kind == "ststr":
+        return ctrl.st_strides[cell[1]]
+    if kind == "mask":
+        return bool(ctrl.dim_mask[cell[1]])
+    if kind == "width":
+        return ctrl.kernel_width
+    raise ValueError(f"unknown config cell {cell!r}")
+
+
 def stream_shape(dims: Tuple[int, ...], strides: Tuple[int, ...],
                  lanes: int) -> Tuple[int, int, int]:
     """(contiguous run, segments, unique elements) of a strided access.

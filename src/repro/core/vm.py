@@ -798,6 +798,17 @@ class VMProgram:
         self.tables = (jnp.asarray(ints), jnp.asarray(flags),
                        jnp.asarray(fimm), jnp.asarray(pat_t),
                        jnp.asarray(mask_t), scat_t, perm_t)
+        # Observability: live row counts of the deduplicated tables
+        # (before bucket padding).  The optimizer's IR-level CSE shrinks
+        # the *instruction stream*; these counters let benchmarks and
+        # tests show how that composes with the VM's own row interning
+        # (``benchmarks/opt_bench.py``).
+        self.table_rows = {
+            "steps": self.n_steps,
+            "patterns": len(self._patterns.rows),
+            "masks": len(self._masks.rows),
+            "scatters": len(self._scat_rows),
+        }
         del (self._ints, self._flags, self._fimm, self._patterns,
              self._masks, self._scat_rows, self._perm_rows)
 

@@ -61,6 +61,8 @@ import numpy as np
 
 from ..core import isa
 from ..core.isa import DType, Instr, Op
+from ..core.machine import (ControlState, apply_config, config_cell,
+                            read_config_cell)
 from . import regalloc
 from .operands import MemoryPlan, Operand, OperandError, OperandRef
 
@@ -251,20 +253,26 @@ class Kernel:                         # the engine can track attachments
 
     # -- execution ---------------------------------------------------------
     def compile(self, cfg=None, mode: Optional[str] = None,
-                target: Optional[object] = None):
+                target: Optional[object] = None,
+                opt_level: Optional[int] = None):
         """The cached :class:`~repro.core.engine.CompiledProgram` — or,
         with ``target=`` (a registered name like ``"rvv-1d"`` or a
         :class:`~repro.targets.Target`), the uniform
         :class:`~repro.targets.CompiledArtifact` exposing
         ``run``/``run_batch``/``timeline``/``energy``/
         ``instruction_mix`` under that target's cost models
-        (docs/TARGETS.md).  The kernel runs unchanged on every target."""
+        (docs/TARGETS.md).  The kernel runs unchanged on every target.
+
+        ``opt_level`` runs the traced program through the
+        :mod:`repro.opt` pass pipeline first (``None`` = as traced);
+        results stay bit-exact — the optimizer's differentially-tested
+        contract (docs/OPTIMIZER.md)."""
         if target is not None:
             from ..targets import compile as compile_for_target
             return compile_for_target(self, target=target, cfg=cfg,
-                                      mode=mode)
+                                      mode=mode, opt_level=opt_level)
         from ..core.engine import compile_program
-        return compile_program(self, cfg, mode=mode)
+        return compile_program(self, cfg, mode=mode, opt_level=opt_level)
 
     def run(self, operands: Optional[Dict[str, np.ndarray]] = None,
             cfg=None, mode: Optional[str] = None,
@@ -323,6 +331,14 @@ class KernelBuilder:
         self._dim_lens: Tuple[int, ...] = (1,)
         self._pinned: List[int] = []
         self._built = False
+        # Duplicate-config suppression: mirror of the control registers
+        # the traced program has established so far, plus the set of
+        # cells it has explicitly written (first writes always emit,
+        # even when they match the power-on defaults — making the traced
+        # configuration explicit is the frontend's job; removing
+        # power-on no-ops is the optimizer's).
+        self._ctrl = ControlState()
+        self._cfg_written: set = set()
 
     # -- operand declaration ----------------------------------------------
     def _declare(self, kind: str, name: str, shape, dtype: DType,
@@ -382,7 +398,7 @@ class KernelBuilder:
     def width(self, bits: int) -> None:
         """Configure the live register width (``vsetwidth``): the
         register file holds ``256 // bits`` physical registers."""
-        self._emit(isa.vsetwidth(bits))
+        self._emit_config(isa.vsetwidth(bits))
 
     def dims(self, *lengths: int,
              ld_strides: Optional[Dict[int, int]] = None,
@@ -398,19 +414,19 @@ class KernelBuilder:
         if not (1 <= len(lengths) <= isa.MAX_DIMS):
             raise BuildError(
                 f"1..{isa.MAX_DIMS} dimensions, got {len(lengths)}")
-        self._emit(isa.vsetdimc(len(lengths)))
+        self._emit_config(isa.vsetdimc(len(lengths)))
         for d, ln in enumerate(lengths):
-            self._emit(isa.vsetdiml(d, int(ln)))
+            self._emit_config(isa.vsetdiml(d, int(ln)))
         for d, s in sorted((ld_strides or {}).items()):
-            self._emit(isa.vsetldstr(d, int(s)))
+            self._emit_config(isa.vsetldstr(d, int(s)))
         for d, s in sorted((st_strides or {}).items()):
-            self._emit(isa.vsetststr(d, int(s)))
+            self._emit_config(isa.vsetststr(d, int(s)))
         self._dim_lens = tuple(int(ln) for ln in lengths)
         return _Scope()
 
     def dim_length(self, dim: int, length: int) -> None:
         """Adjust one dimension's length in place (tail iterations)."""
-        self._emit(isa.vsetdiml(dim, int(length)))
+        self._emit_config(isa.vsetdiml(dim, int(length)))
         lens = list(self._dim_lens)
         if dim < len(lens):
             lens[dim] = int(length)
@@ -422,12 +438,12 @@ class KernelBuilder:
         (``vunsetmask`` on entry, ``vsetmask`` on exit) — the Section-IV
         reduction idiom."""
         for i in mask_bits:
-            self._emit(isa.vunsetmask(int(i)))
+            self._emit_config(isa.vunsetmask(int(i)))
         try:
             yield
         finally:
             for i in reversed(mask_bits):
-                self._emit(isa.vsetmask(int(i)))
+                self._emit_config(isa.vsetmask(int(i)))
 
     def scalar(self, count: int) -> None:
         """Account ``count`` interleaved scalar-core instructions (cost
@@ -471,6 +487,23 @@ class KernelBuilder:
         if self._built:
             raise BuildError("builder already built")
         self._instrs.append(instr)
+
+    def _emit_config(self, instr: Instr) -> None:
+        """Emit a config instruction unless it re-establishes state this
+        trace has already explicitly written (re-entering a dimension
+        scope inside a Python loop re-traces its ``vsetdim*``/stride
+        writes — identical state does not need re-emitting).  The state
+        *trajectory* at every retained instruction is unchanged, so
+        addressing and strict validation are unaffected; regression test
+        in ``tests/test_frontend.py``."""
+        cell = config_cell(instr)
+        before = read_config_cell(self._ctrl, cell)
+        apply_config(self._ctrl, instr)
+        if cell in self._cfg_written and \
+                read_config_cell(self._ctrl, cell) == before:
+            return
+        self._cfg_written.add(cell)
+        self._emit(instr)
 
     def _fresh(self, dtype: DType) -> VectorHandle:
         h = VectorHandle(self, self._next_vreg, dtype)

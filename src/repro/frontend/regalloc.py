@@ -67,26 +67,12 @@ class RegisterPressureError(RuntimeError):
 
 def _defs_reg(instr: Instr) -> Optional[int]:
     """The virtual register this instruction writes, if any."""
-    if instr.op in (Op.SLD, Op.RLD) or (
-            instr.op in isa.ARITH_OPS and instr.op not in isa.COMPARE_OPS
-            ) or instr.op in isa.MOVE_OPS:
-        return instr.vd
-    return None
+    return isa.reg_defs(instr)
 
 
 def _uses_regs(instr: Instr) -> List[int]:
     """The virtual registers this instruction reads."""
-    uses: List[int] = []
-    if instr.op in (Op.SST, Op.RST):
-        if instr.vs1 is not None:
-            uses.append(instr.vs1)
-        return uses
-    if instr.op in isa.VECTOR_OPS:
-        if instr.vs1 is not None:
-            uses.append(instr.vs1)
-        if instr.vs2 is not None:
-            uses.append(instr.vs2)
-    return uses
+    return list(isa.reg_uses(instr))
 
 
 @dataclasses.dataclass

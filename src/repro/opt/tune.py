@@ -1,0 +1,75 @@
+"""``tune()``: pick the cheapest legal schedule for one target.
+
+The list scheduler (:mod:`repro.opt.passes`) is heuristic; which
+heuristic wins depends on the target's cost structure (the in-cache
+timeline overlaps core issue time with CB busy time differently than the
+Neon analytic model).  ``tune()`` makes the choice empirical: it sweeps
+every registered schedule priority over the dead-config+CSE'd program,
+prices each candidate through ``targets.compile(...).timeline`` — the
+*target's* timing model over the static trace — and returns the
+artifact of the cheapest one.
+
+    result = repro.opt.tune(kernel, target="mve-bs")
+    result.best                  # winning priority name
+    result.artifact.run(...)     # compiled, bit-exact, cheapest schedule
+    result.table                 # {priority: total_cycles} sweep record
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+from ..core.isa import Program
+from ..core.machine import MVEConfig
+from . import passes as _p
+from .pipeline import optimize
+
+
+@dataclasses.dataclass(frozen=True)
+class TuneResult:
+    """Outcome of one schedule sweep for one target."""
+
+    target: str
+    best: str                          # winning schedule priority
+    program: Program                   # the winning optimized program
+    artifact: object                   # CompiledArtifact of the winner
+    table: Dict[str, float]            # priority -> modeled total cycles
+
+    @property
+    def cycles(self) -> float:
+        return self.table[self.best]
+
+
+def tune(kernel_or_program, target: str = "mve-bs",
+         cfg: Optional[MVEConfig] = None, mode: Optional[str] = None,
+         priorities: Optional[Tuple[str, ...]] = None,
+         **overrides) -> TuneResult:
+    """Sweep legal schedules for ``target`` and return the cheapest.
+
+    Every candidate starts from the dead-config+CSE'd program (those
+    passes are unconditional wins) and differs only in the scheduler's
+    priority heuristic, so every candidate is a legal reordering of the
+    same instruction multiset — the differential harness's guarantees
+    apply to each one.  Pricing uses the target's static-trace timeline
+    (no execution happens); ties resolve to the earlier priority in
+    ``SCHEDULE_PRIORITIES`` order, so the result is deterministic.
+    """
+    from .. import targets                 # late: targets imports engine
+
+    tgt = targets.get_target(target)
+    base = optimize(kernel_or_program, passes=("dead-config", "cse"))
+    names = tuple(priorities or _p.SCHEDULE_PRIORITIES)
+    table: Dict[str, float] = {}
+    best_name = None
+    best_art = None
+    best_prog = None
+    for name in names:
+        candidate = _p.schedule(base, priority=name)
+        art = targets.compile(candidate, target=tgt, cfg=cfg, mode=mode,
+                              **overrides)
+        cycles = art.timeline().total_cycles
+        table[name] = cycles
+        if best_name is None or cycles < table[best_name]:
+            best_name, best_art, best_prog = name, art, candidate
+    return TuneResult(target=tgt.name, best=best_name, program=best_prog,
+                      artifact=best_art, table=table)

@@ -280,6 +280,7 @@ class CompiledArtifact:
 
 def compile(kernel_or_program, target="mve-bs",
             cfg: Optional[MVEConfig] = None, mode: Optional[str] = None,
+            opt_level: Optional[int] = None,
             **overrides) -> CompiledArtifact:
     """THE entry point: compile a frontend kernel or raw MVE program for
     one target.
@@ -296,9 +297,15 @@ def compile(kernel_or_program, target="mve-bs",
     ``bh_segment_bits=8``, ...).  Compilations are cached per target
     (``cache_tag``), so the same program compiled for two targets holds
     two independent LRU entries (``cache_info().per_target``).
+
+    ``opt_level`` routes the program through the :mod:`repro.opt` pass
+    pipeline first (``None`` = as written); the artifact's ``program``,
+    ``trace`` and ``timeline`` then describe the optimized text, priced
+    under this target's models — which is what ``repro.opt.tune()``
+    sweeps schedules with (docs/OPTIMIZER.md).
     """
     tgt = get_target(target)
     tcfg = tgt.machine_config(cfg, **overrides)
     cp = compile_program(kernel_or_program, tcfg, mode=mode,
-                         cache_tag=tgt.name)
+                         cache_tag=tgt.name, opt_level=opt_level)
     return CompiledArtifact(tgt, tcfg, cp)

@@ -20,12 +20,18 @@ must come back bit-identical (memory, registers, Tag) from all four
 executors, with the stepwise interpreter as the oracle.  The scheduler is
 exercised through both tiers: the vmapped VM batch (``promote_after=None``)
 and the fused batch (``promote_after=1``).
+
+The optimizer (:mod:`repro.opt`) is part of the same equivalence class:
+every random program and random frontend kernel is additionally pushed
+through each pipeline prefix, and the optimized text must reproduce the
+*unoptimized* oracle bit for bit (docs/OPTIMIZER.md) — an optimizer bug
+surfaces here as a conformance failure, not a silent miscompile.
 """
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
-from repro import targets
+from repro import opt, targets
 from repro.core import MVEConfig, MVEInterpreter, compile_program, isa, rvv
 from repro.core.isa import DType, Op
 from repro.core.patterns import PATTERNS, RVV_COMPARISON_SET
@@ -275,6 +281,14 @@ def _check_all_executors(prog, mems):
             _assert_result_equal(st_i, mem_i, t.result())
         assert sched.stats.dispatches < max(len(mems), 2), \
             "variants of one program must share a batched dispatch"
+    # the fifth member of the equivalence class: the optimizer — every
+    # pipeline prefix of this program must reproduce the same oracle
+    # (VM executor; the full pipeline additionally on fused)
+    for prefix in opt.pipeline_prefixes():
+        full = len(prefix) == len(opt.DEFAULT_PIPELINE)
+        opt.verify_optimized(prog, list(mems), passes=prefix, cfg=CFG,
+                             modes=("vm", "fused") if full else ("vm",),
+                             oracle=oracle)
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -374,6 +388,8 @@ def test_cross_target_random_programs():
             art = targets.compile(prog, target=tname)
             mem_t, st_t = art.run(mems[0])
             _assert_result_equal(st_i, mem_i, st_t)
+        # ...and so is the fully-optimized text, on every target
+        opt.verify_across_targets(prog, mems[0], level=opt.MAX_OPT_LEVEL)
 
 
 # ---------------------------------------------------------------------------
@@ -446,6 +462,8 @@ def test_cross_target_random_frontend_kernels(seed):
         art = targets.compile(k, target=tname)
         mem_t, st_t = art.run(mem0)
         _assert_result_equal(st_i, mem_i, st_t)
+    # frontend kernels go through every optimizer pipeline prefix too
+    opt.verify_prefixes(k.program, mem0, cfg=CFG, modes=("vm",))
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,371 @@
+"""The optimizer pass pipeline (``repro.opt``): unit semantics of every
+pass, the structural guard, differential bit-exactness of every pipeline
+prefix against the stepwise oracle, cross-target exactness, and the
+``tune()`` schedule sweep.
+
+The contract under test (docs/OPTIMIZER.md): any program, any pipeline
+prefix, any executor — memory, the full register file (masked lanes
+included) and the Tag latch equal the oracle's on the *unoptimized*
+program bit for bit; the optimized trace never invents memory or config
+work; instruction count and register pressure never increase.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro import opt, targets
+from repro.core import isa
+from repro.core.engine import compile_program
+from repro.core.interp import MVEInterpreter
+from repro.core.isa import DType, Op
+from repro.core.machine import MVEConfig
+from repro.core.patterns import PATTERNS
+from repro.frontend.regalloc import max_pressure
+
+CFG = MVEConfig()
+ORACLE = MVEInterpreter(CFG, compiled=False)
+F, DW = DType.F, DType.DW
+
+
+# ---------------------------------------------------------------------------
+# dead-config: unit semantics
+# ---------------------------------------------------------------------------
+
+def test_dead_config_drops_power_on_reestablishment():
+    """width=32 and dimc=1 are the power-on values — writing them at
+    program start is an architectural no-op."""
+    prog = [isa.vsetwidth(32), isa.vsetdimc(1), isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1), isa.vsst(F, 0, 64, 1)]
+    out = list(opt.dead_config(prog))
+    assert out == [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1),
+                   isa.vsst(F, 0, 64, 1)]
+
+
+def test_dead_config_drops_reestablished_scope():
+    """Re-writing the dimension config already in effect (the frontend's
+    old dimension-scope re-entry pattern) is removed."""
+    prog = [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1),
+            isa.vsetdimc(1), isa.vsetdiml(0, 8),       # re-establishment
+            isa.vsst(F, 0, 64, 1)]
+    out = list(opt.dead_config(prog))
+    assert out == [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1),
+                   isa.vsst(F, 0, 64, 1)]
+
+
+def test_dead_config_drops_overwritten_unobserved_write():
+    prog = [isa.vsetdiml(0, 4), isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1)]
+    assert list(opt.dead_config(prog)) == \
+        [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1)]
+
+
+def test_dead_config_keeps_observed_state():
+    """Writes something later observes — including the final (tail)
+    control state and mask bits a load's lane mask depends on — stay."""
+    prog = [isa.vsetdiml(0, 8), isa.vunsetmask(3),
+            isa.vsld(F, 0, 0, 1),                      # observes the mask
+            isa.vsetmask(3), isa.vsst(F, 0, 64, 1)]
+    assert list(opt.dead_config(prog)) == prog
+
+
+def test_dead_config_fixpoint_cascades():
+    """unset+set of one mask bit with no observer between collapses to
+    nothing, which in turn kills the first diml write (the mask ops were
+    its only observers) — the two rules iterate to a fixpoint."""
+    prog = [isa.vsetdiml(0, 16), isa.vunsetmask(3), isa.vsetmask(3),
+            isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1)]
+    assert list(opt.dead_config(prog)) == \
+        [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1)]
+
+
+# ---------------------------------------------------------------------------
+# cse: unit semantics
+# ---------------------------------------------------------------------------
+
+def test_cse_drops_exact_reload():
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1),
+            isa.vsld(F, 0, 0, 1),                      # exact re-execution
+            isa.vsst(F, 0, 64, 1)]
+    assert list(opt.cse(prog)) == \
+        [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1), isa.vsst(F, 0, 64, 1)]
+
+
+def test_cse_rewrites_duplicate_load_to_move():
+    """Same access, different destination: the second load becomes a
+    vcpy — identical write-back lanes, one memory access fewer."""
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1), isa.vsld(F, 1, 0, 1),
+            isa.vadd(F, 2, 0, 1), isa.vsst(F, 2, 64, 1)]
+    out = list(opt.cse(prog))
+    assert out[2] == isa.vcpy(F, 1, 0)
+    assert sum(1 for i in out if i.op is Op.SLD) == 1
+    assert len(out) == len(prog)                       # substitution, not drop
+
+
+def test_cse_store_invalidates_available_loads():
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1),
+            isa.vsst(F, 0, 0, 1),                      # clobbers the row
+            isa.vsld(F, 1, 0, 1)]
+    assert list(opt.cse(prog)) == prog
+
+
+def test_cse_config_change_blocks_reuse():
+    """The full control-state digest is part of the expression key: a
+    reconfigured load resolves different addresses/lanes and must stay."""
+    prog = [isa.vsetdiml(0, 8), isa.vsld(F, 0, 0, 1),
+            isa.vsetdiml(0, 4), isa.vsld(F, 1, 0, 1),
+            isa.vsst(F, 1, 64, 1)]
+    assert list(opt.cse(prog)) == prog
+
+
+def test_cse_folds_duplicate_splats_but_not_predicated():
+    prog = [isa.vsetdiml(0, 8), isa.vsetdup(DW, 0, 5), isa.vsetdup(DW, 1, 5)]
+    assert list(opt.cse(prog))[-1] == isa.vcpy(DW, 1, 0)
+    pred = isa.Instr(Op.SET_DUP, dtype=DW, vd=1, imm=5, predicated=True)
+    out = list(opt.cse([isa.vsetdiml(0, 8), isa.vsetdup(DW, 0, 5), pred]))
+    assert out[-1] == pred                 # Tag-dependent write-back: kept
+
+
+def test_cse_register_clobber_invalidates_expression():
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1),
+            isa.vsetdup(F, 0, 7),                      # clobbers v0
+            isa.vsld(F, 1, 0, 1)]                      # not available anymore
+    assert list(opt.cse(prog)) == prog
+
+
+# ---------------------------------------------------------------------------
+# schedule: unit semantics
+# ---------------------------------------------------------------------------
+
+def test_schedule_hoists_independent_loads():
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1),
+            isa.vadd(F, 2, 0, 0),
+            isa.vsld(F, 1, 64, 1),                     # independent load
+            isa.vadd(F, 3, 1, 2),
+            isa.vsst(F, 3, 128, 1)]
+    out = list(opt.schedule(prog, priority="loads-first"))
+    assert sorted(map(repr, out)) == sorted(map(repr, prog))  # a permutation
+    assert out.index(isa.vsld(F, 1, 64, 1)) < out.index(isa.vadd(F, 2, 0, 0))
+
+
+def test_schedule_respects_memory_dependences():
+    """A load from a stored-to interval must not move above the store."""
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(F, 0, 0, 1),
+            isa.vsst(F, 0, 64, 1),
+            isa.vsld(F, 1, 64, 1),                     # reads the stored row
+            isa.vsst(F, 1, 128, 1)]
+    out = list(opt.schedule(prog, priority="loads-first"))
+    assert out.index(isa.vsst(F, 0, 64, 1)) < out.index(isa.vsld(F, 1, 64, 1))
+
+
+def test_schedule_respects_tag_dependences():
+    prog = [isa.vsetdiml(0, 8),
+            isa.vsld(DW, 0, 0, 1),
+            isa.vcmp(Op.GT, DW, 0, 0),
+            isa.vadd(DW, 1, 0, 0, predicated=True),
+            isa.vsld(DW, 2, 64, 1),
+            isa.vsst(DW, 1, 128, 1)]
+    out = list(opt.schedule(prog, priority="loads-first"))
+    assert out.index(isa.vcmp(Op.GT, DW, 0, 0)) < \
+        out.index(isa.vadd(DW, 1, 0, 0, predicated=True))
+    # the independent load still hoisted above the compare
+    assert out.index(isa.vsld(DW, 2, 64, 1)) < \
+        out.index(isa.vcmp(Op.GT, DW, 0, 0))
+
+
+def test_schedule_source_priority_is_identity():
+    prog = isa.Program(PATTERNS["daxpy"]().program)
+    assert list(opt.schedule(prog, priority="source")) == list(prog)
+
+
+def test_schedule_rejects_unknown_priority():
+    with pytest.raises(ValueError, match="unknown schedule priority"):
+        opt.schedule([], priority="bogus")
+
+
+# ---------------------------------------------------------------------------
+# Pipeline: levels, audit trail, the structural guard
+# ---------------------------------------------------------------------------
+
+def test_opt_level_resolution():
+    prog = isa.Program(PATTERNS["daxpy"]().program)
+    assert list(opt.optimize(prog)) == list(prog)              # None = identity
+    assert list(opt.optimize(prog, level=0)) == list(prog)
+    assert list(opt.optimize(prog, level=99)) == \
+        list(opt.optimize(prog, level=opt.MAX_OPT_LEVEL))      # clamped
+    with pytest.raises(isa.ProgramError, match="unknown optimizer pass"):
+        opt.optimize(prog, passes=("nope",))
+    prefixes = opt.pipeline_prefixes()
+    assert prefixes[0] == () and prefixes[-1] == opt.DEFAULT_PIPELINE
+    assert len(prefixes) == opt.MAX_OPT_LEVEL + 1
+    assert opt.OPT_LEVELS[opt.MAX_OPT_LEVEL] == opt.DEFAULT_PIPELINE
+
+
+def test_optimize_result_audit_trail():
+    res = opt.optimize_result(PATTERNS["spmm"]().program, level=True)
+    assert tuple(r.name for r in res.reports) == opt.DEFAULT_PIPELINE
+    assert res.removed == len(res.source) - len(res.program) > 0
+    assert not any(r.reverted for r in res.reports)
+    assert res.reports[0].removed > 0              # dead-config fires on spmm
+    for r in res.reports:
+        assert r.instructions_out <= r.instructions_in
+        assert r.pressure_out <= r.pressure_in
+
+
+def test_pipeline_guard_reverts_contract_breaking_pass(monkeypatch):
+    """A pass whose output is longer or fails validation degrades to a
+    no-op (reported as ``reverted``) instead of a miscompile."""
+    run = PATTERNS["daxpy"]()
+
+    def longer(program):
+        return list(program) + [isa.vsetwidth(64)]
+
+    def invalid(program):
+        return [isa.Instr(Op.ADD, dtype=F, vd=0, vs1=0)]   # missing vs2
+
+    monkeypatch.setitem(opt.PASSES, "longer", longer)
+    monkeypatch.setitem(opt.PASSES, "invalid", invalid)
+    try:
+        for name in ("longer", "invalid"):
+            opt.cache_clear()
+            res = opt.optimize_result(run.program, passes=(name,))
+            assert res.reports[0].reverted, name
+            assert list(res.program) == list(res.source), name
+    finally:
+        opt.cache_clear()          # drop entries keyed on the fake passes
+
+
+def test_pipeline_idempotent_on_pattern_library():
+    for name in sorted(PATTERNS):
+        once = opt.optimize(PATTERNS[name]().program, level=True)
+        assert list(opt.optimize(once, level=True)) == list(once), name
+
+
+def test_optimizer_reduces_sweep_instruction_count():
+    """Acceptance: across the full Section-IV pattern sweep the pipeline
+    strictly reduces total instruction count and never regresses any
+    single pattern (counts per pattern are frozen in
+    tests/data/opt_goldens.json)."""
+    total_in = total_out = 0
+    for name in sorted(PATTERNS):
+        res = opt.optimize_result(PATTERNS[name]().program, level=True)
+        assert len(res.program) <= len(res.source), name
+        total_in += len(res.source)
+        total_out += len(res.program)
+    assert total_out < total_in
+
+
+# ---------------------------------------------------------------------------
+# Differential verification: prefixes x executors x targets
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name",
+                         ["daxpy", "reduction", "spmm", "upsample",
+                          "transpose"])
+def test_pipeline_prefixes_bit_exact_on_patterns(name):
+    """Every pipeline prefix reproduces the stepwise oracle of the
+    unoptimized program bit for bit (memory, registers, Tag) and keeps
+    sub-multiset trace semantics, on the VM executor."""
+    run = PATTERNS[name]()
+    opt.verify_prefixes(run.program, run.memory, cfg=CFG, modes=("vm",))
+
+
+def test_full_pipeline_bit_exact_on_fused_executor():
+    run = PATTERNS["daxpy"]()
+    opt.verify_optimized(run.program, run.memory, level=opt.MAX_OPT_LEVEL,
+                         cfg=CFG, modes=("vm", "fused"))
+
+
+def test_prefixes_across_all_registered_targets():
+    """Bit-exact vs the oracle on all six targets at every prefix — the
+    acceptance bar of this PR."""
+    run = PATTERNS["upsample"]()
+    assert len(targets.list_targets()) >= 6
+    for prefix in opt.pipeline_prefixes():
+        opt.verify_across_targets(run.program, run.memory, passes=prefix)
+
+
+def test_opt_level_threads_through_compile_surfaces():
+    """engine.compile_program / targets.compile / Kernel.compile all run
+    the same pipeline and agree on the optimized text."""
+    run = PATTERNS["reduction"]()
+    base = compile_program(run.program, CFG)
+    lvl = compile_program(run.program, CFG, opt_level=opt.MAX_OPT_LEVEL)
+    assert len(lvl.program) < len(base.program)
+    mem_b, _ = base.run(run.memory)
+    mem_o, _ = lvl.run(run.memory)
+    np.testing.assert_array_equal(np.asarray(mem_b), np.asarray(mem_o))
+
+    art = targets.compile(run.program, target="mve-bs", opt_level=True)
+    assert list(art.program) == list(lvl.program)
+
+    k = run.kernel
+    cp = k.compile(opt_level=opt.MAX_OPT_LEVEL)
+    assert len(cp.program) <= len(k.program)
+
+
+# ---------------------------------------------------------------------------
+# tune(): the per-target schedule sweep
+# ---------------------------------------------------------------------------
+
+def test_tune_picks_cheapest_schedule_and_stays_exact():
+    run = PATTERNS["daxpy"]()
+    res = opt.tune(run.program, target="mve-bs")
+    assert res.target == "mve-bs"
+    assert set(res.table) == set(opt.SCHEDULE_PRIORITIES)
+    assert res.best in res.table and res.cycles == min(res.table.values())
+    # the tuned artifact still executes bit-exactly vs the oracle
+    mem_i, st_i = ORACLE.run_stepwise(run.program, run.memory)
+    _, st_t = res.artifact.run(run.memory)
+    opt.assert_states_equal(st_i, mem_i, st_t)
+    # a target with a different cost structure sweeps the same table
+    res2 = opt.tune(run.program, target="rvv-1d",
+                    priorities=("source", "loads-first"))
+    assert res2.target == "rvv-1d" and set(res2.table) == \
+        {"source", "loads-first"}
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis properties (run in CI where hypothesis is installed)
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10 ** 9), st.integers(0, 3))
+def test_property_pipeline_monotone_and_valid(seed, n_passes):
+    """Any prefix over any random program: never longer, never more
+    register pressure, still validates."""
+    from test_conformance import _random_program_ex
+    prog, _ = _random_program_ex(seed, variants=1)
+    base = isa.Program(prog)
+    out = opt.optimize(base, passes=opt.DEFAULT_PIPELINE[:n_passes])
+    assert len(out) <= len(base)
+    assert max_pressure(list(out)) <= max_pressure(list(base))
+    isa.validate(out)
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(0, 10 ** 9))
+def test_property_each_pass_idempotent(seed):
+    from test_conformance import _random_program_ex
+    prog, _ = _random_program_ex(seed, variants=1)
+    base = isa.Program(prog)
+    for name, fn in opt.PASSES.items():
+        once = fn(base)
+        assert list(fn(once)) == list(once), name
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.integers(0, 10 ** 9), st.integers(0, 3))
+def test_property_strict_validation_preserved(seed, n_passes):
+    """Strictly-valid frontend kernels stay strictly valid under every
+    pipeline prefix (config trajectory preservation)."""
+    from test_conformance import _random_frontend_kernel
+    k = _random_frontend_kernel(seed)
+    size = len(k.pack())
+    isa.validate(k.program, memory_size=size, strict=True)
+    out = opt.optimize(k.program, passes=opt.DEFAULT_PIPELINE[:n_passes])
+    isa.validate(out, memory_size=size, strict=True)

@@ -1,0 +1,98 @@
+"""Golden optimizer-effect regression suite.
+
+Freezes, for every Section-IV pattern, what the pass pipeline *does*:
+per-prefix instruction counts, the per-pass removal audit, and the
+static-trace :class:`Timeline` totals of the unoptimized (level 0) and
+fully-optimized programs.  A pass regression — an optimization that
+silently stops firing, or one that starts increasing modeled cycles —
+shows up as an exact-value diff here rather than an unexplained shift in
+BENCH_engine.json's ``opt`` section.
+
+Regenerating after an *intentional* pass change:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_opt_goldens.py
+
+Counts and cycle totals are integers, so equality is exact.
+"""
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro import opt
+from repro.core import MVEConfig, compile_program, cost
+from repro.core.patterns import PATTERNS
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "opt_goldens.json"
+REGEN = bool(os.environ.get("REPRO_REGEN_GOLDEN"))
+CFG = MVEConfig()
+
+
+def _pattern_entry(name: str) -> dict:
+    run = PATTERNS[name]()
+    res = opt.optimize_result(run.program, level=opt.MAX_OPT_LEVEL)
+    prefix_counts = {
+        "+".join(prefix) or "none":
+            len(opt.optimize(run.program, passes=prefix))
+        for prefix in opt.pipeline_prefixes()
+    }
+    tl0 = cost.simulate(
+        compile_program(run.program, CFG, mode="vm").static_trace, CFG)
+    tl3 = cost.simulate(
+        compile_program(res.program, CFG, mode="vm").static_trace, CFG)
+    return {
+        "instructions": {"level0": len(res.source),
+                         "full": len(res.program)},
+        "prefix_instructions": prefix_counts,
+        "removed_by_pass": {r.name: r.removed for r in res.reports},
+        "cycles": {"level0": int(tl0.total_cycles),
+                   "full": int(tl3.total_cycles)},
+    }
+
+
+def _current() -> dict:
+    return {"pipeline": list(opt.DEFAULT_PIPELINE),
+            "patterns": {n: _pattern_entry(n) for n in sorted(PATTERNS)}}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if REGEN:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_current(), indent=1, sort_keys=True))
+    assert GOLDEN.exists(), \
+        "golden file missing - regenerate with REPRO_REGEN_GOLDEN=1"
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_opt_effect_frozen(golden, name):
+    """Exact per-prefix counts, per-pass removals and cycle totals."""
+    assert _pattern_entry(name) == golden["patterns"][name], \
+        f"{name}: optimizer effect drifted"
+
+
+def test_golden_pipeline_matches_registry(golden):
+    assert golden["pipeline"] == list(opt.DEFAULT_PIPELINE)
+    assert sorted(golden["patterns"]) == sorted(PATTERNS)
+
+
+def test_optimizer_never_regresses_and_wins_overall(golden):
+    """Acceptance: monotone per pattern, strict win on the sweep — for
+    both instruction count and modeled cycles."""
+    t_i0 = t_if = t_c0 = t_cf = 0
+    for name, e in golden["patterns"].items():
+        assert e["instructions"]["full"] <= e["instructions"]["level0"], name
+        assert e["cycles"]["full"] <= e["cycles"]["level0"], name
+        counts = e["prefix_instructions"]
+        assert counts["none"] == e["instructions"]["level0"], name
+        full_key = "+".join(golden["pipeline"])
+        assert counts[full_key] == e["instructions"]["full"], name
+        t_i0 += e["instructions"]["level0"]
+        t_if += e["instructions"]["full"]
+        t_c0 += e["cycles"]["level0"]
+        t_cf += e["cycles"]["full"]
+    assert t_if < t_i0, "pipeline stopped reducing sweep instruction count"
+    assert t_cf < t_c0, "pipeline stopped reducing sweep modeled cycles"
