@@ -1,0 +1,136 @@
+"""Resilience benchmarks: serving throughput under injected faults.
+
+``resilience`` section — the self-healing scheduler
+(:mod:`repro.runtime.scheduler` + :mod:`repro.resilience`) replaying the
+mixed Swan request stream under deterministic chaos plans:
+
+* ``resilience/fault_rate_0`` — the fault-free steady-state baseline
+  with the full resilience machinery armed (injector attached, breakers
+  and deadlines live) but no fault firing: what the failure-semantics
+  layer costs when nothing fails.
+* ``resilience/fault_rate_1`` / ``resilience/fault_rate_10`` — the same
+  stream with 1 % / 10 % of requests drawing a transient fault
+  (dispatch errors + straggler latency, seeded): throughput and p95
+  latency with bisection/retry recovery in the loop.  The acceptance
+  bound (ISSUE 7) is chaos throughput within 2x of fault-free at 10 %,
+  asserted for the audited variant in ``tests/test_resilience.py``.
+* ``resilience/worker_kill_recovery`` — background-mode stream with an
+  injected worker-thread death mid-stream: time from the kill firing to
+  the first request served by the supervisor-restarted worker.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import numpy as np
+
+from .serving_bench import _QUICK_MIX, _STREAM_MIX, request_stream
+
+
+def _percentile_us(tickets, q) -> float:
+    return float(np.percentile([t.latency for t in tickets], q) * 1e6)
+
+
+def _chaos_replay(cfg, stream, plan, sched_kw=None):
+    from repro.resilience import FaultInjector
+    from repro.runtime.scheduler import MVEScheduler
+
+    inj = FaultInjector(plan) if plan is not None else None
+    sched = MVEScheduler(cfg, promote_after=2, injector=inj,
+                         **(sched_kw or {}))
+    tickets = [sched.submit(r.program, r.memory) for _, r in stream]
+    t0 = time.perf_counter()
+    sched.drain()
+    wall = time.perf_counter() - t0
+    sched.close()
+    return wall, tickets, sched, inj
+
+
+def resilience_report(quick: bool = False) -> List[Tuple[str, float, str]]:
+    from repro.core import MVEConfig, vm
+    from repro.resilience import FaultInjector, FaultPlan
+    from repro.runtime.scheduler import MVEScheduler
+
+    cfg = MVEConfig()
+    vm.prewarm(cfg)
+    stream = request_stream(_QUICK_MIX if quick else _STREAM_MIX)
+    n = len(stream)
+    rows: List[Tuple[str, float, str]] = []
+
+    # Transient-only plans: every injected fault exercises a recovery
+    # path (bit-flips are *silent* without the audit and would inflate
+    # throughput; the audited variant is covered by the chaos test).
+    # seed=0 draws a non-empty victim set at both rates for both the
+    # quick (12-request) and full (64-request) streams
+    plans = {
+        1: FaultPlan.random(seed=0, n_requests=n, rate=0.01,
+                            kinds=("error", "straggler")),
+        10: FaultPlan.random(seed=0, n_requests=n, rate=0.10,
+                             kinds=("error", "straggler")),
+    }
+
+    # Steady state: warm tier executables and every bisection-half batch
+    # shape the chaos plans will produce.
+    _chaos_replay(cfg, stream, None)
+    for plan in plans.values():
+        _chaos_replay(cfg, stream, plan)
+
+    wall_clean = None
+    for pct, plan in [(0, None)] + sorted(plans.items()):
+        walls, tickets, sched, inj = [], None, None, None
+        for _ in range(1 if quick else 3):
+            w, tickets, sched, inj = _chaos_replay(cfg, stream, plan)
+            walls.append(w)
+        wall = min(walls)
+        if pct == 0:
+            wall_clean = wall
+        st = sched.stats
+        derived = (f"requests={n};req_per_s={n / wall:.0f};"
+                   f"p95_lat_us={_percentile_us(tickets, 95):.0f};"
+                   f"injected={inj.injected if inj else 0};"
+                   f"retries={st.retries};bisections={st.bisections};"
+                   f"recovered={st.recovered}")
+        if pct > 0:
+            derived += f";slowdown_vs_clean={wall / wall_clean:.2f}x"
+        rows.append((f"resilience/fault_rate_{pct}", wall * 1e6, derived))
+
+    # -- recovery latency after an injected worker death -------------------
+    from repro.resilience import FaultSpec
+    # after=0: the worker dies on its first wakeup *holding the whole
+    # burst* — the worst case the requeue + supervisor-restart path sees
+
+    def kill_run():
+        plan = FaultPlan([FaultSpec(site="worker", kind="kill")])
+        inj = FaultInjector(plan)
+        sched = MVEScheduler(cfg, promote_after=2, background=True,
+                             injector=inj)
+        tickets = [sched.submit(r.program, r.memory) for _, r in stream]
+        for t in tickets:
+            t.result(timeout=120)
+        sched.close()
+        return tickets, sched, inj
+
+    # Background batch formation produces dispatch shapes drain-mode
+    # warming never compiled; one unmeasured pass makes the measured
+    # recovery latency steady-state (restart + first serve, not XLA).
+    kill_run()
+    tickets, sched, inj = kill_run()
+    kills = [f["t"] for f in inj.fired if f["kind"] == "kill"]
+    if kills:
+        t_kill = kills[0]
+        after = [t.done_at for t in tickets if t.done_at > t_kill]
+        recovery = (min(after) - t_kill) if after else 0.0
+        derived = (f"requests={n};restarts={sched.stats.worker_restarts};"
+                   f"served_after_kill={len(after)};all_resolved=True")
+    else:
+        # the whole stream served inside one worker wakeup: no kill fired
+        recovery = 0.0
+        derived = f"requests={n};kill_never_fired=True;all_resolved=True"
+    rows.append(("resilience/worker_kill_recovery", recovery * 1e6,
+                 derived))
+    return rows
+
+
+def resilience_report_quick() -> List[Tuple[str, float, str]]:
+    return resilience_report(quick=True)

@@ -24,6 +24,7 @@ from .engine_bench import engine_vs_interp
 from .frontend_bench import frontend_overhead, frontend_overhead_quick
 from .kernels_bench import kernel_microbench
 from .opt_bench import opt_report
+from .resilience_bench import resilience_report, resilience_report_quick
 from .roofline import roofline_rows
 from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
 from .targets_bench import target_sweep
@@ -45,6 +46,7 @@ SECTIONS = {
     "kernels": kernel_microbench,
     "serving": mve_serving,
     "serving_lm": serving_throughput,
+    "resilience": resilience_report,
     "roofline": roofline_rows,
 }
 
@@ -54,6 +56,7 @@ _QUICK_SECTIONS = {
     "frontend": frontend_overhead_quick,
     "opt": lambda: opt_report(quick=True),
     "serving": mve_serving_quick,
+    "resilience": resilience_report_quick,
     "targets": lambda **kw: target_sweep(quick=True, **kw),
 }
 

@@ -73,8 +73,40 @@ from .cost import TraceEvent
 from .machine import (JNP_DTYPE, ControlState, MVEConfig, apply_config,
                       cbs_from_lane_mask, flatten_indices, lane_dim_mask,
                       store_layout, stream_shape, touched_lines)
-from .vm import AotJit, VMProgram, VMUnsupported
+from .vm import AotJit, VMProgram, VMUnsupported, fire_fault_hook
 from .vm import cache_info as _vm_cache_info
+from .vm import set_fault_hook  # noqa: F401  (re-export: one hook registry)
+
+
+class ExecutorError(RuntimeError):
+    """Base of the typed executor failures.
+
+    The execution stack used to let whatever exception an executor's
+    internals raised — an XLA error at sync time, a numpy shape error
+    three frames deep — escape to callers untyped, which made the serving
+    runtime's failure handling guesswork.  Each subclass names the
+    boundary that failed; the original exception is chained as
+    ``__cause__``.  User-input errors (:class:`~repro.core.isa.ProgramError`,
+    ``TypeError``/``ValueError`` from malformed arguments) are *not*
+    wrapped: they mean "fix the request", not "the executor failed".
+    """
+
+
+class CompileError(ExecutorError):
+    """Compiling/lowering a program to an executable failed."""
+
+
+class DispatchError(ExecutorError):
+    """Launching an execution (single or batched) failed."""
+
+
+class FinalizeError(ExecutorError):
+    """Materializing results of a dispatched execution failed."""
+
+
+# exception types that pass through untyped (user errors / control flow)
+_PASSTHROUGH = (isa.ProgramError, VMUnsupported, TypeError, ValueError,
+                ExecutorError)
 
 
 @dataclasses.dataclass
@@ -430,19 +462,34 @@ class CompiledProgram:
         prepares the next request, so a serving loop
         (:mod:`repro.runtime.scheduler`) pays one sync per drain cycle
         instead of one per request."""
-        memory = self._as_memory(memory)
-        if self._use_vm(memory):
-            return ("vm", self._vm.run_async(memory))
-        masks, zeros = self._fused_operands()
-        return ("fused", self._jit(self._donatable(memory), masks, zeros))
+        fire_fault_hook("engine.dispatch", tier=self.mode)
+        try:
+            memory = self._as_memory(memory)
+            if self._use_vm(memory):
+                return ("vm", self._vm.run_async(memory))
+            masks, zeros = self._fused_operands()
+            return ("fused", self._jit(self._donatable(memory), masks,
+                                       zeros))
+        except _PASSTHROUGH:
+            raise
+        except Exception as e:
+            raise DispatchError(f"dispatch failed ({self.mode} mode): "
+                                f"{type(e).__name__}: {e}") from e
 
     def finalize_run(self, pending) -> Tuple[jnp.ndarray, ExecutionResult]:
         """Materialize a :meth:`run_async` dispatch into ``(mem, state)``."""
-        kind, out = pending
-        if kind == "vm":
-            mem, regs, tag, rand_addrs = self._vm.finalize(out)
-        else:
-            mem, regs, tag, rand_addrs = out
+        fire_fault_hook("engine.finalize", tier=self.mode)
+        try:
+            kind, out = pending
+            if kind == "vm":
+                mem, regs, tag, rand_addrs = self._vm.finalize(out)
+            else:
+                mem, regs, tag, rand_addrs = out
+        except _PASSTHROUGH:
+            raise
+        except Exception as e:
+            raise FinalizeError(f"finalize failed ({self.mode} mode): "
+                                f"{type(e).__name__}: {e}") from e
         trace = self._finalize_trace(rand_addrs)
         # Fresh ctrl/trace objects per run: callers may mutate the returned
         # state (the stepwise oracle hands out fresh state too), and this
@@ -474,20 +521,34 @@ class CompiledProgram:
     def run_batch_async(self, memories):
         """Dispatch a batched execution without blocking (see
         :meth:`run_async`); finalize with :meth:`finalize_batch`."""
-        if isinstance(memories, dict):
-            memories = self._bound_kernel().pack_batch(memories)
-        if self._use_vm(memories):
-            return ("vm", self._vm.run_batch_async(memories))
-        masks, zeros = self._fused_operands()
-        mem, regs, tag, _ = self._get_batch_jit()(
-            self._donatable(memories), masks, zeros)
-        return ("fused", (mem, dict(regs), tag))
+        fire_fault_hook("engine.dispatch", tier=self.mode)
+        try:
+            if isinstance(memories, dict):
+                memories = self._bound_kernel().pack_batch(memories)
+            if self._use_vm(memories):
+                return ("vm", self._vm.run_batch_async(memories))
+            masks, zeros = self._fused_operands()
+            mem, regs, tag, _ = self._get_batch_jit()(
+                self._donatable(memories), masks, zeros)
+            return ("fused", (mem, dict(regs), tag))
+        except _PASSTHROUGH:
+            raise
+        except Exception as e:
+            raise DispatchError(f"batch dispatch failed ({self.mode} "
+                                f"mode): {type(e).__name__}: {e}") from e
 
     def finalize_batch(self, pending):
-        kind, out = pending
-        if kind == "vm":
-            return self._vm.finalize_batch(out)
-        return out
+        fire_fault_hook("engine.finalize", tier=self.mode)
+        try:
+            kind, out = pending
+            if kind == "vm":
+                return self._vm.finalize_batch(out)
+            return out
+        except _PASSTHROUGH:
+            raise
+        except Exception as e:
+            raise FinalizeError(f"batch finalize failed ({self.mode} "
+                                f"mode): {type(e).__name__}: {e}") from e
 
     def batch_group_key(self, memory) -> tuple:
         """Scheduling key: requests whose keys are equal can be stacked
@@ -712,7 +773,14 @@ def compile_program(program: isa.Program,
     # concurrent lookups (scheduler submit() runs on many client threads).
     # A racing duplicate construction is possible but harmless — the
     # first insertion wins below and the loser is dropped.
-    built = CompiledProgram(program, cfg, mode=mode)
+    fire_fault_hook("engine.compile", tier=mode)
+    try:
+        built = CompiledProgram(program, cfg, mode=mode)
+    except _PASSTHROUGH:
+        raise
+    except Exception as e:
+        raise CompileError(f"compile walk failed ({mode} mode): "
+                           f"{type(e).__name__}: {e}") from e
     with _CACHE_LOCK:
         cp = _CACHE.get(key)
         if cp is not None:

@@ -106,6 +106,36 @@ class VMUnsupported(Exception):
     :func:`repro.core.engine.compile_program` falls back to the fused path."""
 
 
+# ---------------------------------------------------------------------------
+# Executor-boundary fault hook (chaos engineering; repro.resilience).
+# ---------------------------------------------------------------------------
+
+# One process-wide hook shared by the VM and the fused engine (engine.py
+# imports these — vm is the lower layer, so the registry lives here).  A
+# :class:`repro.resilience.FaultInjector` installs its ``engine_hook`` to
+# inject failures/latency at the real executor boundaries; ``None`` (the
+# default) costs one attribute load per dispatch.
+_FAULT_HOOK = None
+_FAULT_HOOK_LOCK = threading.Lock()
+
+
+def set_fault_hook(hook):
+    """Install ``hook(site, **ctx)`` at the executor boundaries; returns
+    the previous hook (restore it when done).  Sites fired here:
+    ``vm.dispatch`` / ``vm.finalize``; :mod:`repro.core.engine` adds
+    ``engine.compile`` / ``engine.dispatch`` / ``engine.finalize``."""
+    global _FAULT_HOOK
+    with _FAULT_HOOK_LOCK:
+        prev, _FAULT_HOOK = _FAULT_HOOK, hook
+    return prev
+
+
+def fire_fault_hook(site: str, **ctx) -> None:
+    hook = _FAULT_HOOK
+    if hook is not None:
+        hook(site, **ctx)
+
+
 def enable_disk_cache(path: Optional[str] = None):
     """Opt into JAX's persistent compilation cache: the VM's "compile the
     machine once" then holds per *machine*, not per process.
@@ -838,6 +868,7 @@ class VMProgram:
         split lets a serving loop (:mod:`repro.runtime.scheduler`) enqueue
         many executions back to back and pay one sync, instead of a
         host round trip per request."""
+        fire_fault_hook("vm.dispatch", tier="vm")
         mem_size = np.asarray(memory).shape[0]
         sig = self._signature(mem_size)
         ex = _executor(sig)
@@ -856,6 +887,7 @@ class VMProgram:
         one trivial XLA executable per distinct program geometry, defeating
         the signature sharing.
         """
+        fire_fault_hook("vm.finalize", tier="vm")
         mem_size, (mem, regfile, tag, addrs) = pending
         return (np.array(np.asarray(mem)[:mem_size]), self._regs(regfile),
                 tag, self._rand_addrs(addrs))
@@ -868,6 +900,7 @@ class VMProgram:
     def run_batch_async(self, memories):
         """Batched :meth:`run_async`: one vmapped dispatch over a leading
         batch of memory images; finalize with :meth:`finalize_batch`."""
+        fire_fault_hook("vm.dispatch", tier="vm")
         mems = np.asarray(memories)
         mem_size = mems.shape[-1]
         sig = self._signature(mem_size)
@@ -877,6 +910,7 @@ class VMProgram:
         return (mem_size, out)
 
     def finalize_batch(self, pending):
+        fire_fault_hook("vm.finalize", tier="vm")
         mem_size, (mem, regfile, tag, _) = pending
         return (np.array(np.asarray(mem)[..., :mem_size]),
                 self._regs(regfile, batched=True), tag)

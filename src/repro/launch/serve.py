@@ -169,6 +169,7 @@ class ProgramRequest:
     memory: np.ndarray
     ticket: object = None                # runtime.scheduler.Ticket
     result: Optional[object] = None      # ServeResult once served
+    error: Optional[BaseException] = None  # typed SchedulerError on failure
 
     @property
     def submitted_at(self) -> float:
@@ -211,14 +212,17 @@ class MVEProgramServer:
         self._inflight: "OrderedDict[int, ProgramRequest]" = OrderedDict()
         self._done: "OrderedDict[int, ProgramRequest]" = OrderedDict()
 
-    def submit(self, program, memory=None, target=None) -> ProgramRequest:
+    def submit(self, program, memory=None, target=None,
+               deadline_s=None) -> ProgramRequest:
         """Accepts a raw ``(program, memory)`` pair or a frontend
         :class:`~repro.frontend.Kernel` plus named operand arrays — the
         same overloads as :meth:`MVEScheduler.submit`; kernel requests
         read results back by name (``req.result.operands``).  ``target``
         selects a registered :mod:`repro.targets` target (unknown names
-        raise a ``ProgramError`` listing what is registered)."""
-        ticket = self.scheduler.submit(program, memory, target=target)
+        raise a ``ProgramError`` listing what is registered);
+        ``deadline_s`` bounds the request's submit-to-resolution time."""
+        ticket = self.scheduler.submit(program, memory, target=target,
+                                       deadline_s=deadline_s)
         with self._lock:
             req = ProgramRequest(rid=self._next_rid,
                                  program=ticket.program,
@@ -228,12 +232,21 @@ class MVEProgramServer:
         return req
 
     def run_until_drained(self) -> Dict[int, ProgramRequest]:
-        """Serve everything in flight; returns rid -> finished request."""
+        """Serve everything in flight; returns rid -> finished request.
+
+        A request the scheduler resolved with a typed error (quarantine,
+        deadline, shed, cancellation — docs/SERVING.md "Failure
+        semantics") finishes with ``req.error`` set and ``req.result``
+        ``None``; one failed request never aborts the drain of the
+        others."""
         self.scheduler.drain()
         with self._lock:
             inflight = list(self._inflight.items())
         for rid, req in inflight:            # blocks outside the lock
-            req.result = req.ticket.result()
+            try:
+                req.result = req.ticket.result()
+            except Exception as e:
+                req.error = e
         with self._lock:
             for rid, req in inflight:
                 self._done[rid] = req
@@ -241,6 +254,12 @@ class MVEProgramServer:
             while len(self._done) > self.keep_done:
                 self._done.popitem(last=False)
             return dict(self._done)      # snapshot, not the internal dict
+
+    def health(self) -> Dict:
+        """The underlying scheduler's health snapshot (worker liveness,
+        breakers, quarantine, retry/shed/audit counters) — what a
+        mesh-level coordinator scrapes."""
+        return self.scheduler.health()
 
     def latency_stats(self, last: Optional[int] = None) -> Dict[str, float]:
         """Mean/p50/p95 request latency (seconds) over finished requests

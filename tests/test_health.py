@@ -1,0 +1,124 @@
+"""Unit tests for the cluster-health runtime primitives
+(:mod:`repro.runtime.health`): heartbeat death/revival, robust
+straggler detection, elastic-remesh planning edge cases.  All clocked
+deterministically — no sleeps."""
+import numpy as np
+import pytest
+
+from repro.runtime.health import (HeartbeatMonitor, StragglerDetector,
+                                  plan_elastic_remesh)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# -- HeartbeatMonitor --------------------------------------------------------
+
+def test_heartbeat_all_healthy_within_timeout():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10.0, clock=clk)
+    clk.advance(9.0)
+    assert mon.dead_hosts() == []
+    assert mon.healthy()
+
+
+def test_heartbeat_silence_marks_dead_and_beat_revives():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(["h0", "h1"], timeout_s=10.0, clock=clk)
+    clk.advance(5.0)
+    mon.beat("h0")
+    clk.advance(6.0)            # h1 silent for 11s, h0 for 6s
+    assert mon.dead_hosts() == ["h1"]
+    assert not mon.healthy()
+    mon.beat("h1")              # restarted host reports again
+    assert mon.dead_hosts() == []
+    assert mon.healthy()
+
+
+def test_heartbeat_unknown_host_beat_registers_it():
+    clk = FakeClock()
+    mon = HeartbeatMonitor([], timeout_s=10.0, clock=clk)
+    mon.beat("late-joiner")
+    assert mon.healthy()
+    clk.advance(11.0)
+    assert mon.dead_hosts() == ["late-joiner"]
+
+
+# -- StragglerDetector -------------------------------------------------------
+
+def _feed(det, times, steps=8):
+    for _ in range(steps):
+        for host, t in times.items():
+            det.record(host, t)
+
+
+def test_straggler_flagged_only_after_persistence():
+    det = StragglerDetector(window=8, mad_threshold=4.0, persistence=3)
+    _feed(det, {"h0": 1.0, "h1": 1.01, "h2": 0.99, "h3": 5.0})
+    assert det.stragglers() == []       # 1st window: flagged once
+    assert det.stragglers() == []       # 2nd
+    assert det.stragglers() == ["h3"]   # persistence=3 reached
+
+
+def test_straggler_flag_resets_on_recovery():
+    det = StragglerDetector(window=4, mad_threshold=4.0, persistence=2)
+    _feed(det, {"h0": 1.0, "h1": 1.01, "h2": 0.99, "h3": 5.0}, steps=4)
+    assert det.stragglers() == []
+    # h3 recovers before the persistence threshold: counter resets
+    _feed(det, {"h0": 1.0, "h1": 1.01, "h2": 0.99, "h3": 1.0}, steps=4)
+    assert det.stragglers() == []
+    assert det.stragglers() == []
+
+
+def test_straggler_needs_three_hosts_and_enough_samples():
+    det = StragglerDetector(window=8, mad_threshold=4.0, persistence=1)
+    _feed(det, {"h0": 1.0, "h1": 50.0})         # only two hosts
+    assert det.stragglers() == []
+    det2 = StragglerDetector(window=8, persistence=1)
+    _feed(det2, {"h0": 1.0, "h1": 1.0, "h2": 50.0}, steps=2)
+    assert det2.stragglers() == []              # < window//2 samples each
+
+
+def test_straggler_robust_to_uniform_times():
+    det = StragglerDetector(window=4, persistence=1)
+    _feed(det, {f"h{i}": 1.0 for i in range(4)}, steps=4)
+    assert det.stragglers() == []               # zero MAD, no outlier
+
+
+# -- plan_elastic_remesh -----------------------------------------------------
+
+def test_remesh_exact_fit_uses_every_chip():
+    plan = plan_elastic_remesh(512, model_parallel=16, chips_per_pod=256)
+    assert (plan.pods, plan.data, plan.model) == (2, 16, 16)
+    assert plan.chips == 512
+    assert plan.dropped_chips == 0
+
+
+def test_remesh_zero_spare_single_mp_group():
+    # Exactly one model-parallel group: data parallelism collapses to 1.
+    plan = plan_elastic_remesh(16, model_parallel=16, chips_per_pod=256)
+    assert (plan.pods, plan.data, plan.model) == (1, 1, 16)
+    assert plan.dropped_chips == 0
+
+
+def test_remesh_survivor_loss_shrinks_dp_keeps_tp():
+    # 300 survivors of a 2x256 deployment: TP extent must be preserved,
+    # DP shrinks to the largest power of two that fits.
+    plan = plan_elastic_remesh(300, model_parallel=16, chips_per_pod=256)
+    assert plan.model == 16
+    assert plan.data & (plan.data - 1) == 0     # power of two
+    assert plan.chips <= 300
+    assert plan.dropped_chips == 300 - plan.chips
+
+
+def test_remesh_not_enough_chips_raises():
+    with pytest.raises(ValueError, match="model-parallel"):
+        plan_elastic_remesh(15, model_parallel=16)
