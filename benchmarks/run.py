@@ -28,11 +28,13 @@ from .resilience_bench import resilience_report, resilience_report_quick
 from .roofline import roofline_rows
 from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
 from .targets_bench import target_sweep
+from .timing_bench import timing_report
 
 SECTIONS = {
     "engine": engine_vs_interp,
     "frontend": frontend_overhead,
     "targets": target_sweep,
+    "timing": timing_report,
     "opt": opt_report,
     "table2": paper_claims.table2_latencies,
     "fig7": paper_claims.fig7_neon,
@@ -58,6 +60,7 @@ _QUICK_SECTIONS = {
     "serving": mve_serving_quick,
     "resilience": resilience_report_quick,
     "targets": lambda **kw: target_sweep(quick=True, **kw),
+    "timing": lambda: timing_report(quick=True),
 }
 
 

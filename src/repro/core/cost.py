@@ -192,6 +192,11 @@ class Timeline:
     cb_slots: float = 0.0
     busy_lane_cycles: float = 0.0
     lane_slots: float = 0.0
+    #: Cycles lost at issue, per cause — filled by the pipeline model
+    #: (:mod:`repro.timing`: ``dependency`` / ``structural`` /
+    #: ``memory-port`` / ``frontend``); empty for analytic timelines,
+    #: which don't resolve *why* an instruction waited.
+    stalls: Dict[str, float] = dataclasses.field(default_factory=dict)
 
     @property
     def cb_utilization(self) -> float:

@@ -16,13 +16,17 @@ core).  This package is that comparison matrix as an API:
     art.instruction_mix().vector                     # Figure 11 currency
 
 Registered targets (``list_targets()``): ``mve-bs`` (default),
-``mve-bp``, ``mve-bh``, ``mve-ac``, ``rvv-1d``, ``neon`` — plus anything
-third-party code adds via ``register_target()``.  Every target executes
-through the same functional engine, so a frontend ``@mve.kernel`` runs
-*unchanged* on all of them and results are bit-exact across targets
-(the RVV path is the same access, sliced — asserted in
-``tests/test_targets.py`` / ``tests/test_conformance.py``).  What
-differs per target is pricing: instruction issue, cycles, and energy.
+``mve-bp``, ``mve-bh``, ``mve-ac``, ``rvv-1d``, ``neon`` — each with a
+pipeline-model twin (``mve-bs-timed``, ..., ``neon-timed``) that prices
+the same trace through the cycle-accurate in-order model of
+:mod:`repro.timing` (per-cause ``timeline().stalls``, a verified
+analytic envelope; docs/TIMING.md) — plus anything third-party code
+adds via ``register_target()``.  Every target executes through the same
+functional engine, so a frontend ``@mve.kernel`` runs *unchanged* on
+all of them and results are bit-exact across targets (the RVV path is
+the same access, sliced — asserted in ``tests/test_targets.py`` /
+``tests/test_conformance.py``).  What differs per target is pricing:
+instruction issue, cycles, and energy.
 
 Design note: docs/TARGETS.md.
 """
@@ -32,6 +36,9 @@ from .base import (CompiledArtifact, InstructionMix,  # noqa: F401
 from .builtin import (DEFAULT_TARGET, MVE_AC, MVE_BH,  # noqa: F401
                       MVE_BP, MVE_BS, NEON, RVV_1D, InCacheTarget,
                       NeonTarget, RVV1DTarget)
+from .timed import (MVE_AC_TIMED, MVE_BH_TIMED,  # noqa: F401
+                    MVE_BP_TIMED, MVE_BS_TIMED, NEON_TIMED,
+                    RVV_1D_TIMED, TimedTarget, timed_variant)
 
 
 def smoke(pattern: str = "daxpy", verbose: bool = False) -> dict:

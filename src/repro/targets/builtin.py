@@ -12,6 +12,12 @@
   neon       Neon   packed SIMD     2x128-bit ASIMD pipes on a mobile core
   =========  =====  ==============  =======================================
 
+Each row also has a ``-timed`` twin (:mod:`repro.targets.timed`,
+registered on package import) that re-prices the same performance trace
+through the cycle-accurate in-order pipeline model of
+:mod:`repro.timing` — scoreboard hazards, chaining, memory ports —
+instead of the analytic timeline.
+
 All six execute through the shared functional engine — bit-exact results
 — and differ only in how the program is *issued and priced* (Figures
 10/11/13).  The in-cache targets reuse the controller/CB timeline model

@@ -26,6 +26,14 @@ every random program and random frontend kernel is additionally pushed
 through each pipeline prefix, and the optimized text must reproduce the
 *unoptimized* oracle bit for bit (docs/OPTIMIZER.md) — an optimizer bug
 surfaces here as a conformance failure, not a silent miscompile.
+
+The ``*-timed`` pipeline-model targets (:mod:`repro.timing`,
+docs/TIMING.md) join the class with an *envelope* property: for every
+random program and random frontend kernel, the pipeline model's cycles
+must lie within ``[ideal-issue lower bound, fully-serialized upper
+bound]`` recomputed from the same TimedOp stream — and timed execution
+stays bit-exact vs. the stepwise oracle (the timing layer must never
+touch functional semantics).
 """
 import numpy as np
 import pytest
@@ -261,6 +269,36 @@ def _assert_result_equal(st_i, mem_i, res):
                                   np.asarray(res.tag))
 
 
+_TIMED_TARGETS = ("mve-bs-timed", "mve-bp-timed", "mve-bh-timed",
+                  "mve-ac-timed", "rvv-1d-timed", "neon-timed")
+
+
+def _check_timed_envelope(prog, mem, oracle=None,
+                          target_names=_TIMED_TARGETS):
+    """Bit-exactness + the timing envelope contract for timed targets.
+
+    The executed trace is priced through the pipeline model; its total
+    must sit inside the ``[lower_bound, upper_bound]`` bracket, which is
+    re-derived here from the same TimedOp stream via
+    :func:`repro.timing.envelope` (not trusted from the timeline)."""
+    from repro import timing
+
+    mem_i, st_i = oracle if oracle is not None \
+        else ORACLE.run_stepwise(prog, mem)
+    for tname in target_names:
+        art = targets.compile(prog, target=tname)
+        mem_t, st_t = art.run(mem)
+        _assert_result_equal(st_i, mem_i, st_t)          # semantics intact
+        tl = art.timeline(st_t)                          # exact trace
+        ops, _ = art.target.timed_ops(art.program, art.cfg, st_t.trace)
+        lo, hi = timing.envelope(ops, art.target.uarch)
+        assert (lo, hi) == (tl.lower_bound, tl.upper_bound), tname
+        assert lo - 1e-6 <= tl.total_cycles <= hi + 1e-6, \
+            f"{tname}: {tl.total_cycles} outside envelope [{lo}, {hi}]"
+        assert {"dependency", "structural",
+                "memory-port", "frontend"} <= set(tl.stalls), tname
+
+
 def _check_all_executors(prog, mems):
     """interp == VM == fused (per image) and == scheduler (batched, both
     tiers), bit for bit."""
@@ -289,6 +327,12 @@ def _check_all_executors(prog, mems):
         opt.verify_optimized(prog, list(mems), passes=prefix, cfg=CFG,
                              modes=("vm", "fused") if full else ("vm",),
                              oracle=oracle)
+    # the sixth member: pipeline-model pricing — bit-exact execution,
+    # cycles inside the analytic envelope (one aligned-dependence and
+    # one synthesized-dependence timed target; the full timed matrix is
+    # swept by test_timed_targets_envelope_*)
+    _check_timed_envelope(prog, mems[0], oracle=oracle[0],
+                          target_names=("mve-bs-timed", "rvv-1d-timed"))
 
 
 @pytest.mark.parametrize("seed", range(8))
@@ -464,6 +508,23 @@ def test_cross_target_random_frontend_kernels(seed):
         _assert_result_equal(st_i, mem_i, st_t)
     # frontend kernels go through every optimizer pipeline prefix too
     opt.verify_prefixes(k.program, mem0, cfg=CFG, modes=("vm",))
+    # ...and through the pipeline-model envelope contract
+    _check_timed_envelope(k.program, mem0, oracle=(mem_i, st_i),
+                          target_names=("mve-bs-timed", "rvv-1d-timed"))
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_timed_targets_envelope_random_programs(seed):
+    """The full timed matrix: every timed target executes the fuzzer's
+    random programs bit-exactly and prices them inside the envelope."""
+    prog, mems = _random_program_ex(seed, variants=1)
+    _check_timed_envelope(prog, mems[0])
+
+
+@pytest.mark.parametrize("seed", range(3))
+def test_timed_targets_envelope_random_frontend_kernels(seed):
+    k = _random_frontend_kernel(seed)
+    _check_timed_envelope(k.program, k.pack())
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,288 @@
+"""Unit + property tests for the pipeline model (:mod:`repro.timing`).
+
+Hand-built :class:`TimedOp` streams pin the hazard semantics exactly:
+RAW/WAR/WAW scoreboard waits, chaining overlap (on a *different* unit)
+vs. full serialization, and structural/memory-port conflicts stalling
+by exactly the configured penalty.  The hypothesis suite (gated through
+``_hypothesis_compat`` like every property suite here) fuzzes the
+contractual properties: determinism, config monotonicity (wider issue
+or more ports never slows the machine down), and the analytic envelope.
+"""
+import dataclasses
+
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.timing import (CTRL_REG, TAG_REG, Scoreboard, TimedOp,
+                          UarchConfig, UARCH_CONFIGS, build_timed_ops,
+                          envelope, get_uarch, list_uarchs,
+                          simulate_pipeline)
+
+#: A laboratory machine: no front-end or issue-hop latency, wide issue,
+#: two array pipes — so only the behavior under test moves the clock.
+LAB = UarchConfig.from_dict("lab", {
+    "fetch_rate": 64, "decode_latency": 0.0, "issue_width": 8,
+    "issue_latency": 0.0, "chaining": False, "chain_latency": 2.0,
+    "mem_ports": 1, "fus": {"array": {"pipes": 2}},
+})
+
+
+def _arr(duration, defs=(), uses=()):
+    return TimedOp("array", float(duration), defs=defs, uses=uses)
+
+
+def _load(duration, defs=(), uses=()):
+    return TimedOp("mem", float(duration), defs=defs, uses=uses)
+
+
+# ---------------------------------------------------------------------------
+# Scoreboard hazards on hand-built streams.
+# ---------------------------------------------------------------------------
+
+def test_raw_hazard_serializes_consumer():
+    tl = simulate_pipeline([_arr(10, defs=(1,)), _arr(5, uses=(1,))], LAB)
+    assert tl.total_cycles == 15.0
+    assert tl.stalls["dependency"] == 10.0
+    # independent ops overlap on the two pipes instead
+    free = simulate_pipeline([_arr(10, defs=(1,)), _arr(5, uses=(2,))], LAB)
+    assert free.total_cycles == 10.0
+    assert free.stalls["dependency"] == 0.0
+
+
+def test_waw_hazard_orders_writers():
+    tl = simulate_pipeline([_arr(10, defs=(1,)), _arr(3, defs=(1,))], LAB)
+    assert tl.total_cycles == 13.0          # 2nd write waits for the 1st
+    assert tl.stalls["dependency"] == 10.0
+    free = simulate_pipeline([_arr(10, defs=(1,)), _arr(3, defs=(2,))], LAB)
+    assert free.total_cycles == 10.0
+
+
+def test_war_hazard_writer_waits_for_reader():
+    tl = simulate_pipeline([_arr(10, uses=(1,)), _arr(1, defs=(1,))], LAB)
+    assert tl.total_cycles == 11.0          # write held until read done
+    assert tl.stalls["dependency"] == 10.0
+    free = simulate_pipeline([_arr(10, uses=(1,)), _arr(1, defs=(2,))], LAB)
+    assert free.total_cycles == 10.0
+
+
+def test_war_tracking_resets_after_write():
+    """Readers gate only the *next* writer, not every later one."""
+    sb = Scoreboard(chaining=False)
+    rd = _arr(10, uses=(1,))
+    sb.commit(rd, 0.0, 10.0)
+    wr = _arr(1, defs=(1,))
+    assert sb.ready_time(wr) == 10.0        # WAR
+    sb.commit(wr, 10.0, 11.0)
+    wr2 = _arr(1, defs=(1,))
+    assert sb.ready_time(wr2) == 11.0       # WAW vs wr, no stale WAR
+
+
+def test_scoreboard_virtual_ctrl_register():
+    """Config writes serialize against in-flight vector consumers."""
+    ops = [TimedOp("ctrl", 1.0, defs=(CTRL_REG,)),
+           _arr(10, defs=(1,), uses=(CTRL_REG,)),
+           TimedOp("ctrl", 1.0, defs=(CTRL_REG,))]
+    tl = simulate_pipeline(ops, LAB)
+    # 2nd config waits for the vector op (WAR on the CR file):
+    # ctrl@0..1, arr@1..11, ctrl@11..12.
+    assert tl.total_cycles == 12.0
+
+
+# ---------------------------------------------------------------------------
+# Chaining.
+# ---------------------------------------------------------------------------
+
+CHAINED = dataclasses.replace(LAB, chaining=True, chain_latency=2.0)
+
+
+def test_chaining_overlaps_dependent_ops_across_units():
+    ops = [_load(10, defs=(1,)), _arr(20, uses=(1,))]
+    on = simulate_pipeline(ops, CHAINED)
+    off = simulate_pipeline(ops, LAB)
+    assert on.total_cycles == 22.0    # consumer starts at chain point 2
+    assert off.total_cycles == 30.0   # consumer waits for full completion
+    assert on.stalls["dependency"] == 2.0
+    assert off.stalls["dependency"] == 10.0
+
+
+def test_chaining_never_beats_completion():
+    """A chained consumer of a *short* producer still can't start
+    before the producer would have completed anyway."""
+    slow_chain = dataclasses.replace(CHAINED, chain_latency=50.0)
+    ops = [_load(10, defs=(1,)), _arr(5, uses=(1,))]
+    tl = simulate_pipeline(ops, slow_chain)
+    assert tl.total_cycles == 15.0    # min(complete, start+50) = 10
+
+
+def test_chaining_not_through_ctrl():
+    """Config results don't chain — consumers wait for completion."""
+    ops = [TimedOp("ctrl", 10.0, defs=(CTRL_REG,)),
+           _arr(5, uses=(CTRL_REG,))]
+    assert (simulate_pipeline(ops, CHAINED).total_cycles
+            == simulate_pipeline(ops, LAB).total_cycles == 15.0)
+
+
+# ---------------------------------------------------------------------------
+# Structural hazards.
+# ---------------------------------------------------------------------------
+
+def test_two_loads_one_port_stall_exactly_the_access_latency():
+    ops = [_load(10, defs=(1,)), _load(10, defs=(2,))]
+    tl = simulate_pipeline(ops, LAB)            # mem_ports=1
+    assert tl.stalls["memory-port"] == 10.0     # exactly one access
+    assert tl.total_cycles == 20.0
+    two = simulate_pipeline(
+        ops, dataclasses.replace(LAB, mem_ports=2))
+    assert two.stalls["memory-port"] == 0.0
+    assert two.total_cycles == 10.0
+
+
+def test_array_pipe_structural_stall():
+    ops = [_arr(10), _arr(10), _arr(10)]        # 2 pipes, 3 ops
+    tl = simulate_pipeline(ops, LAB)
+    assert tl.stalls["structural"] == 10.0      # third op waits one slot
+    assert tl.total_cycles == 20.0
+
+
+def test_issue_width_limits_per_cycle_issue():
+    narrow = dataclasses.replace(LAB, issue_width=1)
+    ops = [_arr(1), _arr(1)]
+    tl = simulate_pipeline(ops, narrow)
+    assert tl.stalls["frontend"] == 1.0         # 2nd op bumped a cycle
+    assert tl.total_cycles == 2.0
+    wide = simulate_pipeline(ops, LAB)
+    assert wide.total_cycles == 1.0
+
+
+def test_issue_hop_and_frontend_floor():
+    ua = dataclasses.replace(LAB, issue_latency=16.0, decode_latency=1.0)
+    tl = simulate_pipeline([_arr(4)], ua)
+    assert tl.total_cycles == 21.0              # decode 1 + hop 16 + 4
+    # scalar-core ops skip the core->engine hop
+    ts = simulate_pipeline([TimedOp("scalar", 4.0)], ua)
+    assert ts.total_cycles == 5.0
+
+
+# ---------------------------------------------------------------------------
+# Surface: timeline bookkeeping, uarch configs, builders.
+# ---------------------------------------------------------------------------
+
+def test_stall_keys_always_present_and_breakdown_sums():
+    tl = simulate_pipeline([_arr(3)], LAB)
+    assert set(tl.stalls) == {"frontend", "dependency", "structural",
+                              "memory-port"}
+    assert tl.stall_cycles == sum(tl.stalls.values())
+    assert tl.lower_bound <= tl.total_cycles <= tl.upper_bound
+
+
+def test_empty_stream():
+    tl = simulate_pipeline([], LAB)
+    assert tl.total_cycles == 0.0
+    assert envelope([], LAB) == (0.0, 0.0)
+
+
+def test_shipped_uarch_configs_resolve():
+    names = list_uarchs()
+    for required in ("mobile-core", "mve-bs", "mve-bp", "mve-bh",
+                     "mve-ac", "rvv-1d"):
+        assert required in names
+        ua = get_uarch(required)
+        assert ua.name == required
+        # YAML-style round trip
+        again = UarchConfig.from_dict(required, ua.to_dict())
+        assert again == ua
+    assert get_uarch(get_uarch("mve-bs")) is get_uarch("mve-bs")
+    assert get_uarch(UARCH_CONFIGS["mve-bs"]).name == "custom"
+
+
+def test_unknown_uarch_and_unknown_keys_raise():
+    with pytest.raises(ValueError):
+        get_uarch("cray-1")
+    with pytest.raises(ValueError):
+        UarchConfig.from_dict("typo", {"fetch_rte": 4})
+
+
+def test_build_timed_ops_aligned_with_program():
+    from repro.core import MVEConfig, compile_program
+    from repro.core.patterns import PATTERNS
+    run = PATTERNS["daxpy"]()
+    cfg = MVEConfig()
+    trace = compile_program(run.program, cfg).static_trace
+    ops, lanes = build_timed_ops(run.program, trace, cfg)
+    assert len(ops) == len(run.program)         # 1:1 static trace
+    assert lanes == float(cfg.lanes)
+    tags = {op.fu for op in ops}
+    assert "mem" in tags and "array" in tags and "ctrl" in tags
+    # every vector op reads the control-register file
+    for op in ops:
+        if op.fu in ("array", "mem"):
+            assert CTRL_REG in op.uses
+
+
+def test_compare_writes_tag_predication_reads_it():
+    from repro.core import MVEConfig, compile_program, isa
+    F = isa.DType.F
+    cfg = MVEConfig()
+    prog = isa.Program([
+        isa.vsetwidth(32), isa.vsetdimc(1), isa.vsetdiml(0, 8),
+        isa.vsld(F, 0, 0, 1),
+        isa.vbinary(isa.Op.GT, F, 1, 0, 0),
+        isa.vbinary(isa.Op.ADD, F, 2, 0, 0, predicated=True),
+    ])
+    trace = compile_program(prog, cfg).static_trace
+    ops, _ = build_timed_ops(prog, trace, cfg)
+    assert TAG_REG in ops[4].defs
+    assert TAG_REG in ops[5].uses
+
+
+# ---------------------------------------------------------------------------
+# Properties: determinism, monotonicity, envelope (hypothesis-gated).
+# ---------------------------------------------------------------------------
+
+@st.composite
+def op_streams(draw):
+    n = draw(st.integers(min_value=1, max_value=40))
+    ops = []
+    for _ in range(n):
+        fu = draw(st.sampled_from(["array", "mem", "ctrl", "scalar"]))
+        dur = float(draw(st.sampled_from([1, 2, 5, 16, 100])))
+        defs = tuple(draw(st.lists(
+            st.integers(min_value=-3, max_value=7), max_size=1)))
+        uses = tuple(draw(st.lists(
+            st.integers(min_value=-3, max_value=7), max_size=2)))
+        ops.append(TimedOp(fu, dur, defs=defs, uses=uses))
+    return ops
+
+
+@st.composite
+def uarches(draw):
+    base = get_uarch(draw(st.sampled_from(
+        ["mve-bs", "mve-bp", "mve-ac", "mobile-core"])))
+    return dataclasses.replace(
+        base,
+        issue_width=draw(st.integers(min_value=1, max_value=4)),
+        mem_ports=draw(st.integers(min_value=1, max_value=3)),
+        chaining=draw(st.booleans()),
+        chain_latency=float(draw(st.integers(min_value=0, max_value=20))))
+
+
+@given(ops=op_streams(), ua=uarches())
+@settings(max_examples=60, deadline=None)
+def test_pipeline_deterministic_and_inside_envelope(ops, ua):
+    a = simulate_pipeline(ops, ua)
+    b = simulate_pipeline(ops, ua)
+    assert a.total_cycles == b.total_cycles
+    assert a.stalls == b.stalls
+    lo, hi = envelope(ops, ua)
+    assert lo - 1e-9 <= a.total_cycles <= hi + 1e-9
+    assert (a.lower_bound, a.upper_bound) == (lo, hi)
+
+
+@given(ops=op_streams(), ua=uarches())
+@settings(max_examples=60, deadline=None)
+def test_pipeline_monotone_in_issue_width_and_ports(ops, ua):
+    base = simulate_pipeline(ops, ua).total_cycles
+    wider = dataclasses.replace(ua, issue_width=ua.issue_width + 1)
+    assert simulate_pipeline(ops, wider).total_cycles <= base + 1e-9
+    ported = dataclasses.replace(ua, mem_ports=ua.mem_ports + 1)
+    assert simulate_pipeline(ops, ported).total_cycles <= base + 1e-9

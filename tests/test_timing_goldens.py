@@ -1,0 +1,95 @@
+"""Golden pipeline-model regression suite.
+
+Freezes, for every Section-IV pattern, what the pipeline model says on
+the two headline uarch configs — ``mve-bs`` (the in-cache controller,
+via the ``mve-bs-timed`` target) and ``mobile-core`` (via
+``neon-timed``): total cycles, the per-cause stall breakdown, and the
+verification envelope.  A model regression — a hazard that silently
+stops being tracked, a chaining change, a duration drift — shows up as
+an exact-value diff here rather than an unexplained shift in
+BENCH_engine.json's ``timing`` section.
+
+Regenerating after an *intentional* model change:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_timing_goldens.py
+
+Cycle totals and stall counts are rounded to 2 decimals before
+comparison, so equality is exact and platform-stable.
+"""
+import json
+import os
+import pathlib
+
+import pytest
+
+from repro import targets
+from repro.core.patterns import PATTERNS
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "timing_goldens.json"
+REGEN = bool(os.environ.get("REPRO_REGEN_GOLDEN"))
+
+#: target -> uarch config the satellite pins (docs/TIMING.md).
+CONFIGS = {"mve-bs-timed": "mve-bs", "neon-timed": "mobile-core"}
+
+
+def _pattern_entry(name: str) -> dict:
+    run = PATTERNS[name]()
+    entry = {}
+    for tname, uarch in CONFIGS.items():
+        art = targets.compile(run.program, target=tname)
+        tl = art.timeline()                     # static trace: exact for
+        assert tl.uarch == uarch                # every golden pattern
+        entry[uarch] = {
+            "cycles": round(tl.total_cycles, 2),
+            "stalls": {k: round(v, 2) for k, v in sorted(tl.stalls.items())},
+            "lower_bound": round(tl.lower_bound, 2),
+            "upper_bound": round(tl.upper_bound, 2),
+        }
+    return entry
+
+
+def _current() -> dict:
+    return {"configs": sorted(CONFIGS.values()),
+            "patterns": {n: _pattern_entry(n) for n in sorted(PATTERNS)}}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if REGEN:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_current(), indent=1, sort_keys=True))
+    assert GOLDEN.exists(), \
+        "golden file missing - regenerate with REPRO_REGEN_GOLDEN=1"
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(PATTERNS))
+def test_timing_frozen(golden, name):
+    """Exact per-pattern cycles, stall breakdown, and envelope."""
+    assert _pattern_entry(name) == golden["patterns"][name], \
+        f"{name}: pipeline-model timing drifted"
+
+
+def test_golden_covers_all_patterns_and_configs(golden):
+    assert sorted(golden["patterns"]) == sorted(PATTERNS)
+    assert golden["configs"] == sorted(CONFIGS.values())
+    for name, entry in golden["patterns"].items():
+        for uarch, rec in entry.items():
+            assert rec["lower_bound"] <= rec["cycles"] \
+                <= rec["upper_bound"], f"{name}/{uarch} outside envelope"
+            assert set(rec["stalls"]) == {"dependency", "frontend",
+                                          "memory-port", "structural"}
+
+
+def test_pipeline_model_finds_overlap(golden):
+    """Acceptance: across the sweep the pipeline model must price below
+    the fully-serialized bound (the machine overlaps *something*) while
+    staying above the ideal-issue bound."""
+    for uarch in golden["configs"]:
+        total = sum(e[uarch]["cycles"] for e in golden["patterns"].values())
+        ub = sum(e[uarch]["upper_bound"]
+                 for e in golden["patterns"].values())
+        lb = sum(e[uarch]["lower_bound"]
+                 for e in golden["patterns"].values())
+        assert lb < total < ub, uarch
