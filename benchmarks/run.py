@@ -27,6 +27,7 @@ from .opt_bench import opt_report
 from .resilience_bench import resilience_report, resilience_report_quick
 from .roofline import roofline_rows
 from .serving_bench import mve_serving, mve_serving_quick, serving_throughput
+from .silicon_bench import silicon_report, silicon_report_quick
 from .targets_bench import target_sweep
 from .timing_bench import timing_report
 
@@ -50,6 +51,7 @@ SECTIONS = {
     "serving_lm": serving_throughput,
     "resilience": resilience_report,
     "roofline": roofline_rows,
+    "silicon": silicon_report,
 }
 
 # sections that understand the reduced-size smoke mode
@@ -61,6 +63,7 @@ _QUICK_SECTIONS = {
     "resilience": resilience_report_quick,
     "targets": lambda **kw: target_sweep(quick=True, **kw),
     "timing": lambda: timing_report(quick=True),
+    "silicon": silicon_report_quick,
 }
 
 

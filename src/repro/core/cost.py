@@ -355,6 +355,23 @@ class EnergyParams:
     e_gpu_launch: float = 2.0e7
     e_gpu_copy_byte: float = 30.0
 
+    @classmethod
+    def derive(cls, cfg: MVEConfig, scheme: "str | None" = None
+               ) -> "EnergyParams":
+        """Derive the in-cache constants for one (scheme, geometry) from
+        the parametric SRAM model (:mod:`repro.silicon`, docs/SILICON.md)
+        instead of the fixed defaults.
+
+        Calibration contract: the parametric model supplies *relative*
+        scaling only — each derived constant is the default times the
+        model's ratio between ``cfg`` and the default Table IV geometry —
+        so at the default geometry under the bit-serial scheme the result
+        is byte-identical to :data:`DEFAULT_ENERGY` and every frozen
+        golden row is preserved exactly.
+        """
+        from ..silicon.params import derived_energy
+        return derived_energy(cfg, scheme)[0]
+
 
 DEFAULT_ENERGY = EnergyParams()
 
@@ -365,6 +382,13 @@ class EnergyReport:
 
     ``total_pj`` is stored (not derived) so models control their exact
     summation order — the golden benchmark rows compare floats exactly.
+
+    ``params_source`` records the provenance of the
+    :class:`EnergyParams` the report was priced with: ``"default"`` for
+    the fixed point-constants, ``"derived:<geometry-digest>"`` when they
+    came from the parametric silicon model
+    (:func:`repro.silicon.params.derived_energy`) — so a benchmark row
+    can always be traced back to the exact (scheme, geometry) pricing.
     """
 
     compute_pj: float = 0.0
@@ -372,14 +396,21 @@ class EnergyReport:
     issue_pj: float = 0.0
     scalar_pj: float = 0.0
     total_pj: float = 0.0
+    params_source: str = "default"
 
 
 def mve_energy(tl: Timeline, cfg: MVEConfig, mem_bytes: float,
-               ep: EnergyParams | None = None) -> EnergyReport:
+               ep: EnergyParams | None = None,
+               params_source: str | None = None) -> EnergyReport:
     """Energy of one in-cache execution: array compute + L2 movement +
     instruction issue + interleaved scalar work.  Shared by every
     in-cache target (MVE under any compute scheme, and the RVV-driven
-    engine, which pays through its larger instruction counts)."""
+    engine, which pays through its larger instruction counts).
+
+    ``params_source`` labels the provenance of ``ep`` in the report
+    (``"derived:<digest>"`` for silicon-model-derived params); ``None``
+    keeps the ``"default"`` label.
+    """
     ep = ep or DEFAULT_ENERGY
     compute = tl.compute_cycles * cfg.num_arrays * ep.e_array_cycle
     data = mem_bytes * ep.e_l2_byte
@@ -387,11 +418,13 @@ def mve_energy(tl: Timeline, cfg: MVEConfig, mem_bytes: float,
     scalar = tl.scalar_instructions * ep.e_scalar
     return EnergyReport(compute_pj=compute, data_pj=data, issue_pj=issue,
                         scalar_pj=scalar,
-                        total_pj=compute + data + issue + scalar)
+                        total_pj=compute + data + issue + scalar,
+                        params_source=params_source or "default")
 
 
 def neon_energy(simd_ops: float, mem_bytes: float,
-                ep: EnergyParams | None = None) -> EnergyReport:
+                ep: EnergyParams | None = None,
+                params_source: str | None = None) -> EnergyReport:
     """Energy of a packed-SIMD execution: ``simd_ops`` 128-bit ASIMD ops
     plus loop/address scalar overhead (0.5 scalar per SIMD op) plus the
     L1 round trip for every byte."""
@@ -401,7 +434,8 @@ def neon_energy(simd_ops: float, mem_bytes: float,
     scalar = scalar_ops * ep.e_scalar
     data = mem_bytes * ep.e_l1_byte
     return EnergyReport(compute_pj=compute, data_pj=data, scalar_pj=scalar,
-                        total_pj=compute + scalar + data)
+                        total_pj=compute + scalar + data,
+                        params_source=params_source or "default")
 
 
 # ---------------------------------------------------------------------------

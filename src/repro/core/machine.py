@@ -26,7 +26,7 @@ from typing import List, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from .isa import MAX_DIMS, MAX_TOP_DIM, DType, Instr, Op
+from .isa import MAX_DIMS, MAX_TOP_DIM, DType, Instr, Op, ProgramError
 
 # Byte data in the mobile kernels (pixels, characters) is unsigned; wider
 # integer types model the signed variants (the ISA has both, Section III-F).
@@ -51,6 +51,46 @@ class MVEConfig:
     scheme: str = "bs"            # bs | bp | bh | ac
     bh_segment_bits: int = 4      # EVE segment width for the bh scheme
     freq_ghz: float = 2.8         # clocked with the core (Table IV)
+
+    #: Compute schemes of Section II-B the cost models understand.
+    KNOWN_SCHEMES = ("bs", "bp", "bh", "ac")
+
+    def __post_init__(self) -> None:
+        """Geometry sanity checks at construction time.
+
+        A bad geometry (non-power-of-two array dimensions, an array count
+        the CB grouping can't divide, an unknown scheme) used to flow
+        silently into ``lanes``/``effective_lanes`` and produce nonsense
+        lane counts far downstream; reject it here with a readable
+        :class:`ProgramError` instead.
+        """
+        for field, value in (("num_arrays", self.num_arrays),
+                             ("arrays_per_cb", self.arrays_per_cb)):
+            if not (isinstance(value, int) and value > 0):
+                raise ProgramError(
+                    f"MVEConfig.{field} must be a positive int, "
+                    f"got {value!r}")
+        for field, value in (("bitlines", self.bitlines),
+                             ("wordlines", self.wordlines),
+                             ("bh_segment_bits", self.bh_segment_bits)):
+            if not (isinstance(value, int) and value > 0
+                    and value & (value - 1) == 0):
+                raise ProgramError(
+                    f"MVEConfig.{field} must be a positive power of two "
+                    f"(the bitline/wordline decoders are binary trees), "
+                    f"got {value!r}")
+        if self.num_arrays % self.arrays_per_cb:
+            raise ProgramError(
+                f"MVEConfig.num_arrays={self.num_arrays} is not divisible "
+                f"by arrays_per_cb={self.arrays_per_cb}; control blocks "
+                f"must group whole arrays (Section V-B)")
+        if self.scheme not in self.KNOWN_SCHEMES:
+            raise ProgramError(
+                f"unknown compute scheme {self.scheme!r}; known schemes: "
+                f"{', '.join(self.KNOWN_SCHEMES)}")
+        if self.freq_ghz <= 0:
+            raise ProgramError(
+                f"MVEConfig.freq_ghz must be positive, got {self.freq_ghz!r}")
 
     @property
     def lanes(self) -> int:

@@ -1,0 +1,31 @@
+"""``repro.silicon`` — parametric SRAM energy/area model + autotuner.
+
+The paper's cost story has three legs the rest of the repo prices with:
+
+* :mod:`~repro.silicon.sram` — a first-order CACTI-style analytic model
+  of the L2 SRAM macro (per-access energies, leakage, area);
+* :mod:`~repro.silicon.params` — per-(scheme, geometry)
+  :class:`~repro.core.cost.EnergyParams` derivation, calibrated so the
+  Table IV default reproduces ``DEFAULT_ENERGY`` byte-identically;
+* :mod:`~repro.silicon.area` — the Table V area-overhead accounting
+  (the 3.588 % claim), parametric in geometry and node.
+
+On top of those, :mod:`~repro.silicon.sweep` persists a disk-cached
+(scheme x geometry) grid and :mod:`~repro.silicon.autotune` searches it
+for cycles/energy/area Pareto fronts per kernel or serving mix.  See
+docs/SILICON.md.
+
+``autotune`` is imported lazily (PEP 562): it reaches into the engine
+and pattern library, which :mod:`repro.targets` also imports — eager
+import here would cycle.
+"""
+from . import area, params, sram, sweep  # noqa: F401
+
+__all__ = ["sram", "params", "area", "sweep", "autotune"]
+
+
+def __getattr__(name):
+    if name == "autotune":
+        import importlib
+        return importlib.import_module(".autotune", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

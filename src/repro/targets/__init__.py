@@ -20,8 +20,9 @@ Registered targets (``list_targets()``): ``mve-bs`` (default),
 pipeline-model twin (``mve-bs-timed``, ..., ``neon-timed``) that prices
 the same trace through the cycle-accurate in-order model of
 :mod:`repro.timing` (per-cause ``timeline().stalls``, a verified
-analytic envelope; docs/TIMING.md) — plus anything third-party code
-adds via ``register_target()``.  Every target executes through the same
+analytic envelope; docs/TIMING.md) — plus ``mve-bicameral``, the
+split-cache demo of :mod:`repro.targets.bicameral`, and anything
+third-party code adds via ``register_target()``.  Every target executes through the same
 functional engine, so a frontend ``@mve.kernel`` runs *unchanged* on
 all of them and results are bit-exact across targets (the RVV path is
 the same access, sliced — asserted in ``tests/test_targets.py`` /
@@ -39,6 +40,7 @@ from .builtin import (DEFAULT_TARGET, MVE_AC, MVE_BH,  # noqa: F401
 from .timed import (MVE_AC_TIMED, MVE_BH_TIMED,  # noqa: F401
                     MVE_BP_TIMED, MVE_BS_TIMED, NEON_TIMED,
                     RVV_1D_TIMED, TimedTarget, timed_variant)
+from .bicameral import MVE_BICAMERAL, BicameralTarget  # noqa: F401
 
 
 def smoke(pattern: str = "daxpy", verbose: bool = False) -> dict:

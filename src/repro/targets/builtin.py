@@ -79,10 +79,26 @@ class InCacheTarget(Target):
     def performance_trace(self, program, cfg, mve_trace):
         return mve_trace
 
+    def energy_model(self, cfg) -> Tuple[EnergyParams, str]:
+        """The ``(params, provenance)`` this target prices energy with.
+
+        Default behaviour derives the constants from the silicon model
+        for the *actual* machine geometry (:mod:`repro.silicon.params`)
+        — byte-identical to :data:`~repro.core.cost.DEFAULT_ENERGY` at
+        the Table IV default by the calibration contract.  A target
+        constructed with explicit ``energy_params`` opts out and keeps
+        its fixed constants (provenance ``"default"``).
+        """
+        if self.energy_params is not cost.DEFAULT_ENERGY:
+            return self.energy_params, "default"
+        from ..silicon.params import derived_energy
+        return derived_energy(cfg, self.scheme)
+
     def energy(self, program, cfg, mve_trace) -> EnergyReport:
         tl = self.timeline(program, cfg, mve_trace)
+        ep, source = self.energy_model(cfg)
         return cost.mve_energy(tl, cfg, cost.data_bytes(mve_trace),
-                               self.energy_params)
+                               ep, params_source=source)
 
     def instruction_mix(self, program, cfg) -> InstructionMix:
         return InstructionMix.from_rvv_stats(rvv.mve_stats(program))

@@ -1,0 +1,353 @@
+"""Tests for ``repro.silicon``: the parametric SRAM energy/area model,
+the calibration contract, the sweep cache, and the Pareto autotuner.
+
+The load-bearing invariant is **golden preservation**: deriving
+``EnergyParams`` from the silicon model at the default Table IV geometry
+must be *byte-identical* to the calibrated ``DEFAULT_ENERGY`` constants,
+so re-pricing the fig7/table2 claims with derived params reproduces the
+frozen golden rows exactly (``test_goldens_byte_identical_with_derived``).
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.core import cost
+from repro.core.isa import ProgramError
+from repro.core.machine import MVEConfig
+from repro.silicon import area, autotune, params, sram, sweep
+
+DEFAULT = MVEConfig()
+
+
+# ---------------------------------------------------------------------------
+# MVEConfig validation (satellite: fail loud, not nonsense lane counts)
+# ---------------------------------------------------------------------------
+
+class TestMVEConfigValidation:
+    def test_default_is_valid(self):
+        MVEConfig()
+
+    @pytest.mark.parametrize("field,value", [
+        ("bitlines", 100), ("bitlines", 0), ("bitlines", -256),
+        ("wordlines", 3), ("wordlines", 0),
+        ("bh_segment_bits", 5),
+    ])
+    def test_power_of_two_fields(self, field, value):
+        with pytest.raises(ProgramError, match="power of two"):
+            MVEConfig(**{field: value})
+
+    def test_arrays_must_group_into_cbs(self):
+        with pytest.raises(ProgramError, match="arrays_per_cb"):
+            MVEConfig(num_arrays=30, arrays_per_cb=4)
+
+    def test_unknown_scheme(self):
+        with pytest.raises(ProgramError, match="unknown compute scheme"):
+            MVEConfig(scheme="quantum")
+
+    def test_bad_array_count(self):
+        with pytest.raises(ProgramError, match="positive int"):
+            MVEConfig(num_arrays=0)
+
+    def test_bad_frequency(self):
+        with pytest.raises(ProgramError, match="freq_ghz"):
+            MVEConfig(freq_ghz=0.0)
+
+    def test_valid_variants_still_construct(self):
+        for na in (8, 16, 32, 64):
+            MVEConfig(num_arrays=na)
+        MVEConfig(bh_segment_bits=8)
+
+
+# ---------------------------------------------------------------------------
+# SRAM model monotonicity
+# ---------------------------------------------------------------------------
+
+class TestSRAMModel:
+    def test_energy_grows_with_bitlines(self):
+        a = sram.estimate(sram.SRAMSpec(bitlines=128))
+        b = sram.estimate(sram.SRAMSpec(bitlines=256))
+        c = sram.estimate(sram.SRAMSpec(bitlines=512))
+        assert a.compute_cycle_pj < b.compute_cycle_pj < c.compute_cycle_pj
+        assert a.total_area_mm2 < b.total_area_mm2 < c.total_area_mm2
+
+    def test_energy_grows_with_wordlines(self):
+        a = sram.estimate(sram.SRAMSpec(wordlines=128))
+        b = sram.estimate(sram.SRAMSpec(wordlines=256))
+        c = sram.estimate(sram.SRAMSpec(wordlines=1024))
+        # deeper bitlines -> more capacitance per access, more cells
+        assert a.compute_cycle_pj < b.compute_cycle_pj < c.compute_cycle_pj
+        assert a.total_area_mm2 < b.total_area_mm2 < c.total_area_mm2
+        assert a.leakage_mw < b.leakage_mw < c.leakage_mw
+
+    def test_shrinks_with_tech_node(self):
+        small = sram.estimate(sram.SRAMSpec(tech_nm=7.0))
+        big = sram.estimate(sram.SRAMSpec(tech_nm=16.0))
+        assert small.compute_cycle_pj < big.compute_cycle_pj
+        assert small.total_area_mm2 < big.total_area_mm2
+        assert small.read_pj_per_byte < big.read_pj_per_byte
+
+    def test_non_physical_spec_rejected(self):
+        with pytest.raises(ValueError):
+            sram.SRAMSpec(bitlines=0)
+        with pytest.raises(ValueError):
+            sram.SRAMSpec(tech_nm=-7.0)
+
+    def test_memoized_identity(self):
+        # equal specs return the *same* object — the x/x == 1.0 anchor
+        assert sram.estimate(sram.SRAMSpec()) is sram.estimate(
+            sram.SRAMSpec())
+
+
+# ---------------------------------------------------------------------------
+# Derived EnergyParams: calibration contract + scheme factors
+# ---------------------------------------------------------------------------
+
+class TestDerivedParams:
+    def test_default_geometry_is_byte_identical(self):
+        ep, source = params.derived_energy(DEFAULT)
+        assert ep == cost.DEFAULT_ENERGY
+        assert source.startswith("derived:")
+
+    def test_derive_classmethod(self):
+        assert cost.EnergyParams.derive(DEFAULT) == cost.DEFAULT_ENERGY
+
+    def test_scheme_factors_order(self):
+        by_scheme = {s: params.derived_energy(DEFAULT, s)[0]
+                     for s in ("bs", "bp", "bh", "ac")}
+        e = {s: p.e_array_cycle for s, p in by_scheme.items()}
+        # bs is the anchor; peripheral-heavier schemes cost more per cycle
+        assert e["bs"] < e["bh"] < e["bp"] < e["ac"]
+        # horizontal layouts skip (part of) the TMU transpose
+        assert by_scheme["bp"].e_l2_byte < by_scheme["bh"].e_l2_byte \
+            < by_scheme["bs"].e_l2_byte
+
+    def test_core_constants_never_scale(self):
+        ep, _ = params.derived_energy(MVEConfig(num_arrays=64,
+                                                bitlines=512))
+        d = cost.DEFAULT_ENERGY
+        assert (ep.e_scalar, ep.e_simd_op, ep.e_l1_byte) == \
+            (d.e_scalar, d.e_simd_op, d.e_l1_byte)
+        assert (ep.e_gpu_flop, ep.e_gpu_launch, ep.e_gpu_copy_byte) == \
+            (d.e_gpu_flop, d.e_gpu_launch, d.e_gpu_copy_byte)
+
+    def test_geometry_scales_in_cache_constants(self):
+        big, _ = params.derived_energy(MVEConfig(bitlines=512))
+        assert big.e_array_cycle > cost.DEFAULT_ENERGY.e_array_cycle
+
+    def test_digest_distinguishes_points(self):
+        a = params.geometry_digest(DEFAULT, "bs")
+        b = params.geometry_digest(DEFAULT, "bp")
+        c = params.geometry_digest(MVEConfig(bitlines=512), "bs")
+        assert len({a, b, c}) == 3
+
+    def test_unknown_scheme_rejected(self):
+        with pytest.raises(KeyError):
+            params.derived_energy(DEFAULT, "quantum")
+
+
+# ---------------------------------------------------------------------------
+# params_source provenance through targets
+# ---------------------------------------------------------------------------
+
+class TestProvenance:
+    def test_incache_reports_derived(self):
+        import repro.targets as targets
+        from repro.core.patterns import PATTERNS
+        run = PATTERNS["daxpy"]()
+        art = targets.compile(run.program, target="mve-bs")
+        rep = art.energy()
+        assert rep.params_source == params.derived_energy(DEFAULT, "bs")[1]
+
+    def test_neon_reports_default(self):
+        import repro.targets as targets
+        from repro.core.patterns import PATTERNS
+        run = PATTERNS["daxpy"]()
+        assert targets.compile(run.program,
+                               target="neon").energy().params_source \
+            == "default"
+
+    def test_explicit_params_opt_out(self):
+        import repro.targets as targets
+        custom = dataclasses.replace(cost.DEFAULT_ENERGY, e_issue=60.0)
+        tgt = targets.InCacheTarget("adhoc-fixed", scheme="bs",
+                                    energy_params=custom)
+        ep, source = tgt.energy_model(DEFAULT)
+        assert ep is custom and source == "default"
+
+
+# ---------------------------------------------------------------------------
+# Golden preservation: derived default == frozen fig7/table2 rows
+# ---------------------------------------------------------------------------
+
+GOLDEN_PATH = os.path.join(os.path.dirname(__file__), "data",
+                           "golden_traces.json")
+
+
+class TestGoldenPreservation:
+    def test_goldens_byte_identical_with_derived(self, monkeypatch):
+        """Re-price the frozen claims with *derived* params: rows must
+        match the golden file byte-for-byte (the calibration contract
+        end-to-end, not just params equality)."""
+        from benchmarks import paper_claims
+        derived = cost.EnergyParams.derive(DEFAULT)
+        monkeypatch.setattr(paper_claims, "EP", derived)
+        with open(GOLDEN_PATH) as fh:
+            golden = json.load(fh)
+        got = {"table2": {name: [us, text] for name, us, text
+                          in paper_claims.table2_latencies()},
+               "fig7": {name: [us, text] for name, us, text
+                        in paper_claims.fig7_neon()}}
+        for section in ("table2", "fig7"):
+            assert golden[section], section
+            for name, row in golden[section].items():
+                assert got[section][name] == row, name
+
+
+# ---------------------------------------------------------------------------
+# Area report
+# ---------------------------------------------------------------------------
+
+class TestArea:
+    def test_default_matches_table_v(self):
+        ar = area.area_report()
+        for k, v in area.TABLE_V_MM2_7NM.items():
+            assert ar.components[k] == pytest.approx(v, rel=1e-12)
+        assert 2.0 <= ar.overhead_pct <= 6.0
+        assert ar.overhead_pct == pytest.approx(3.56, abs=0.05)
+        assert ar.neon_overhead_pct == pytest.approx(16.27, abs=0.1)
+
+    def test_area_scales_with_geometry(self):
+        small = area.area_report(MVEConfig(num_arrays=16))
+        big = area.area_report(MVEConfig(num_arrays=64))
+        assert small.added_mm2 < area.area_report().added_mm2 \
+            < big.added_mm2
+
+    def test_area_shrinks_with_node(self):
+        assert area.area_report(tech_nm=5.0).added_mm2 \
+            < area.area_report(tech_nm=7.0).added_mm2
+
+    def test_storage_arrays_amortize(self):
+        plain = area.area_report()
+        split = area.area_report(storage_arrays=32)
+        assert split.added_mm2 == plain.added_mm2          # same additions
+        assert split.l2_mm2 > plain.l2_mm2                 # bigger macro
+        assert split.overhead_vs_cache_pct < plain.overhead_vs_cache_pct
+
+    def test_bicameral_target_registered(self):
+        import repro.targets as targets
+        assert "mve-bicameral" in targets.list_targets()
+        tgt = targets.get_target("mve-bicameral")
+        ar = tgt.area_report()
+        assert ar.overhead_vs_cache_pct \
+            < area.area_report().overhead_vs_cache_pct
+
+    def test_bicameral_bit_exact_and_equal_priced(self):
+        """The compute partition IS the default machine: identical
+        results *and* identical pricing to mve-bs."""
+        import numpy as np
+        import repro.targets as targets
+        from repro.core.patterns import PATTERNS
+        run = PATTERNS["daxpy"]()
+        a = targets.compile(run.program, target="mve-bs")
+        b = targets.compile(run.program, target="mve-bicameral")
+        ma, _ = a.run(run.memory)
+        mb, _ = b.run(run.memory)
+        np.testing.assert_array_equal(np.asarray(ma), np.asarray(mb))
+        assert a.timeline().total_cycles == b.timeline().total_cycles
+        assert a.energy().total_pj == b.energy().total_pj
+
+
+# ---------------------------------------------------------------------------
+# Sweep cache
+# ---------------------------------------------------------------------------
+
+class TestSweepCache:
+    def test_cold_equals_warm(self, tmp_path):
+        path = str(tmp_path / "records.json")
+        cold = sweep.sweep(cache_path=path)
+        assert os.path.exists(path)
+        warm = sweep.sweep(cache_path=path)
+        assert warm == cold
+        assert len(cold) == len(sweep.default_grid())
+
+    def test_version_mismatch_invalidates(self, tmp_path):
+        path = str(tmp_path / "records.json")
+        sweep.sweep(cache_path=path)
+        with open(path) as fh:
+            doc = json.load(fh)
+        doc["model_version"] = "0-stale"
+        with open(path, "w") as fh:
+            json.dump(doc, fh)
+        assert sweep.load_cache(path) is None
+        again = sweep.sweep(cache_path=path)        # recomputes + rewrites
+        assert sweep.load_cache(path) is not None
+        assert again == sweep.sweep(cache_path=path)
+
+    def test_corrupt_cache_recovers(self, tmp_path):
+        path = str(tmp_path / "records.json")
+        with open(path, "w") as fh:
+            fh.write("{not json")
+        records = sweep.sweep(cache_path=path)
+        assert len(records) == len(sweep.default_grid())
+
+    def test_subset_served_from_cache(self, tmp_path):
+        path = str(tmp_path / "records.json")
+        full = sweep.sweep(cache_path=path)
+        point = sweep.default_grid()[0]
+        sub = sweep.sweep(points=[point], cache_path=path)
+        assert sub[point.key] == full[point.key]
+
+
+# ---------------------------------------------------------------------------
+# Autotuner
+# ---------------------------------------------------------------------------
+
+QUICK_CANDIDATES = [
+    autotune.Candidate(scheme=s, num_arrays=na, bitlines=bl)
+    for s in ("bs", "bp") for na, bl in ((32, 256), (64, 256))
+]
+
+
+class TestAutotune:
+    def test_deterministic(self):
+        a = autotune.autotune("daxpy", QUICK_CANDIDATES)
+        b = autotune.autotune("daxpy", QUICK_CANDIDATES)
+        assert a == b
+
+    def test_front_is_non_dominated(self):
+        res = autotune.autotune("daxpy", QUICK_CANDIDATES)
+        assert res.front
+        for p in res.front:
+            for q in res.points:
+                assert not (q.cycles <= p.cycles
+                            and q.energy_pj <= p.energy_pj
+                            and q.area_mm2 <= p.area_mm2
+                            and (q.cycles < p.cycles
+                                 or q.energy_pj < p.energy_pj
+                                 or q.area_mm2 < p.area_mm2))
+
+    def test_default_candidates_meet_floor(self):
+        cands = autotune.default_candidates()
+        assert len(cands) >= 24
+        assert all(c.num_arrays * c.bitlines >= autotune.MIN_LANES
+                   for c in cands)
+
+    def test_stream_weights_matter(self):
+        light = autotune.autotune_stream([("daxpy", 1)], QUICK_CANDIDATES)
+        heavy = autotune.autotune_stream([("daxpy", 5)], QUICK_CANDIDATES)
+        for lp, hp in zip(light.points, heavy.points):
+            assert hp.cycles == pytest.approx(5 * lp.cycles)
+
+    def test_points_carry_derived_provenance(self):
+        res = autotune.autotune("daxpy", QUICK_CANDIDATES)
+        for p in res.points:
+            assert p.params_source == params.derived_energy(
+                p.candidate.cfg())[1]
+
+    def test_best_respects_key(self):
+        res = autotune.autotune("daxpy", QUICK_CANDIDATES)
+        assert res.best("cycles").cycles == min(p.cycles for p in res.front)
+        assert res.best("energy_pj").energy_pj == min(p.energy_pj
+                                                      for p in res.front)
