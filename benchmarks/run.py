@@ -9,8 +9,8 @@ the per-target sweep + the roofline table from the dry-run artifacts.
 Prints ``name,us_per_call,derived`` CSV; ``--json`` also rewrites the
 given file (the repo tracks ``BENCH_engine.json`` so the perf trajectory
 of the execution engine is versioned alongside the code).  ``--targets``
-filters the ``targets`` section to a comma-separated subset of the
-registered target names (docs/TARGETS.md).
+filters the ``targets`` and ``models`` sections to a comma-separated
+subset of the registered target names (docs/TARGETS.md).
 """
 from __future__ import annotations
 
@@ -23,6 +23,7 @@ from . import paper_claims
 from .engine_bench import engine_vs_interp
 from .frontend_bench import frontend_overhead, frontend_overhead_quick
 from .kernels_bench import kernel_microbench
+from .models_bench import models_bench
 from .opt_bench import opt_report
 from .resilience_bench import resilience_report, resilience_report_quick
 from .roofline import roofline_rows
@@ -35,6 +36,7 @@ SECTIONS = {
     "engine": engine_vs_interp,
     "frontend": frontend_overhead,
     "targets": target_sweep,
+    "models": models_bench,
     "timing": timing_report,
     "opt": opt_report,
     "table2": paper_claims.table2_latencies,
@@ -62,6 +64,8 @@ _QUICK_SECTIONS = {
     "serving": mve_serving_quick,
     "resilience": resilience_report_quick,
     "targets": lambda **kw: target_sweep(quick=True, **kw),
+    "models": lambda **kw: models_bench(quick=True, **kw),
+    "serving_lm": lambda: serving_throughput(quick=True),
     "timing": lambda: timing_report(quick=True),
     "silicon": silicon_report_quick,
 }
@@ -90,7 +94,7 @@ def main() -> None:
             continue
         if args.quick and section in _QUICK_SECTIONS:
             fn = _QUICK_SECTIONS[section]
-        if section == "targets":
+        if section in ("targets", "models"):
             fn = (lambda fn=fn: fn(only_targets=target_filter))
         try:
             for name, us, derived in fn():

@@ -19,8 +19,10 @@ from all 14 Section-IV patterns (the Swan workload mix of Table III):
 * ``serving/oracle_check`` — every steady-replay result compared
   bit-for-bit against the stepwise interpreter oracle.
 
-``serving_lm`` section — the continuous-batching LM decode benchmark
-(slot masking on the lane grid), unchanged from PR 1.
+``serving_lm`` section — the same scheduler serving *model* work: a
+decode-layer stream of :mod:`repro.nn` block kernels (KV
+gather/scatter, attention/GEMM tiles, SSM steps, MoE gathers), each
+request checked against its own jnp oracle (docs/MODELS.md).
 """
 from __future__ import annotations
 
@@ -162,45 +164,107 @@ def mve_serving_quick() -> List[Tuple[str, float, str]]:
 
 
 # ---------------------------------------------------------------------------
-# LM decode serving (continuous batching on the lane grid), from PR 1.
+# LM serving on the MVE engine itself: the repro.nn block stream.
 # ---------------------------------------------------------------------------
 
-def serving_throughput() -> List[Tuple[str, float, str]]:
-    import dataclasses
+def _lm_block_stream(quick: bool, copies: int):
+    """A decode-step request stream drawn from the model-block zoo:
+    several distinct instances per block (different seeds — new KV
+    tiles / routing decisions per request), weighted toward the blocks
+    a decode layer issues most, interleaved round-robin like concurrent
+    decode slots."""
+    from repro.nn import BLOCK_KERNELS
 
-    import jax
+    weights = {"kv_gather": 3, "kv_scatter": 3, "attn_tile": 1,
+               "gemm_tile": 2, "ssm_scan": 2, "moe_gather": 2}
+    quick_kwargs = {
+        "kv_gather": dict(window=8, head_dim=8, max_seq=16, pos0=2),
+        "kv_scatter": dict(window=8, head_dim=8, max_seq=16, pos0=2),
+        "attn_tile": dict(tq=8, tk=8, d=4, chunk=4),
+        "gemm_tile": dict(n=16, kdim=4, m=16),
+        "ssm_scan": dict(n_state=8, d_inner=16),
+        "moe_gather": dict(tokens=16, d_expert=8),
+    }
+    per_block = {}
+    for name, w in weights.items():
+        count = max(1, (w * copies) // 2) if quick else w * copies
+        kwargs = quick_kwargs[name] if quick else {}
+        per_block[name] = [BLOCK_KERNELS[name](seed=100 + 17 * i,
+                                               **kwargs)
+                           for i in range(count)]
+    stream = []
+    for i in range(max(len(v) for v in per_block.values())):
+        for name in weights:
+            if i < len(per_block[name]):
+                stream.append((name, per_block[name][i]))
+    return stream
 
-    from repro.configs import get_config
-    from repro.launch.serve import ContinuousBatchingEngine, Request
-    from repro.models import LM
 
-    cfg = get_config("qwen2-0.5b", reduced=True)
-    cfg = dataclasses.replace(cfg, num_layers=1)
-    params = LM(cfg).init_params(jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
+def serving_throughput(quick: bool = False) -> List[Tuple[str, float, str]]:
+    """``serving_lm`` — the LM decode-layer block stream served by the
+    MVE program scheduler (:mod:`repro.runtime.scheduler`).
 
-    def run(slots: int) -> Tuple[float, float, int]:
-        eng = ContinuousBatchingEngine(cfg, params, batch_slots=slots,
-                                       max_seq=32)
-        for i in range(6):
-            eng.submit(Request(
-                rid=i, prompt=rng.integers(1, cfg.vocab_size, 4)
-                .astype(np.int32), max_new_tokens=4))
-        # warmup the jitted step
-        eng.step()
+    Where ``serving`` replays the Section-IV microkernel mix, this
+    section replays *model* work: the :mod:`repro.nn` zoo blocks a
+    decode step actually issues (KV gather/scatter, attention tiles,
+    GEMM tiles, SSM steps, MoE gathers), each request a distinct
+    instance submitted as a :class:`~repro.frontend.Kernel`.  Rows
+    mirror ``serving``: a sequential per-request baseline, a
+    steady-state scheduler replay, and the per-request jnp-oracle check
+    (every block's own ``check``, not just memory equality)."""
+    from repro.core import MVEConfig, compile_program, vm
+    from repro.runtime.scheduler import MVEScheduler
+
+    cfg = MVEConfig()
+    vm.prewarm(cfg)
+    stream = _lm_block_stream(quick, copies=1 if quick else 2)
+    n = len(stream)
+    rows: List[Tuple[str, float, str]] = []
+
+    # -- sequential per-request baseline (warm caches) ---------------------
+    cps = [compile_program(r.kernel.program, cfg) for _, r in stream]
+    for cp, (_, r) in zip(cps, stream):
+        cp.run(r.memory)
+    seq_walls = []
+    for _ in range(1 if quick else 3):
         t0 = time.perf_counter()
-        done = eng.run_until_drained()
-        dt = time.perf_counter() - t0
-        toks = sum(len(r.output) for r in done.values())
-        return dt, toks / dt, toks
+        for cp, (_, r) in zip(cps, stream):
+            cp.run(r.memory)
+        seq_walls.append(time.perf_counter() - t0)
+    seq_wall = min(seq_walls)
+    rows.append(("serving_lm/sequential_run", seq_wall * 1e6,
+                 f"requests={n};us_per_req={seq_wall / n * 1e6:.0f};"
+                 f"req_per_s={n / seq_wall:.0f}"))
 
-    rows = []
-    base_tps = None
-    for slots in (1, 4):
-        dt, tps, toks = run(slots)
-        if base_tps is None:
-            base_tps = tps
-        rows.append((f"serving_lm/slots{slots}", dt * 1e6 / max(toks, 1),
-                     f"tokens_per_s={tps:.1f};"
-                     f"batching_speedup={tps/base_tps:.2f}x"))
+    # -- steady scheduler replay (kernels submitted directly) --------------
+    def _replay_kernels():
+        tickets = [sched.submit(r.kernel) for _, r in stream]
+        t0 = time.perf_counter()
+        sched.drain()
+        return time.perf_counter() - t0, [t.result() for t in tickets]
+
+    sched = MVEScheduler(cfg, promote_after=2, max_batch=16)
+    for _ in range(2):                  # warm: promotions + batch shapes
+        _replay_kernels()
+    steady_wall, results = _replay_kernels()
+    for _ in range(0 if quick else 2):
+        w2, r2 = _replay_kernels()
+        if w2 < steady_wall:
+            steady_wall, results = w2, r2
+    st = sched.stats
+    rows.append(("serving_lm/scheduler_steady", steady_wall * 1e6,
+                 f"requests={n};"
+                 f"speedup_vs_sequential={seq_wall / steady_wall:.2f}x;"
+                 f"req_per_s={n / steady_wall:.0f};"
+                 f"batch_efficiency={st.batch_efficiency:.2f};"
+                 f"promotions={st.promotions}"))
+
+    # -- every result against the block's own jnp oracle -------------------
+    t0 = time.perf_counter()
+    for (name, r), res in zip(stream, results):
+        r.check(res.memory, res)
+    rows.append(("serving_lm/oracle_check",
+                 (time.perf_counter() - t0) * 1e6,
+                 f"requests_checked={n};blocks="
+                 f"{len(set(nm for nm, _ in stream))};oracle=jnp_ref"))
     return rows

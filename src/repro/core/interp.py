@@ -170,13 +170,14 @@ class MVEInterpreter:
             src = old(instr.vs1)
             # Drop masked lanes; later lanes win on address collisions
             # (well-defined scatter order, matches a sequential loop).
-            idx = jnp.asarray(np.where(amask, addr, -1))
-            valid = idx >= 0
-            safe_idx = jnp.where(valid, idx, 0)
-            mem_dt = state.memory.dtype
-            update = jnp.where(valid, src.astype(mem_dt),
-                               state.memory[safe_idx])
-            state.memory = state.memory.at[safe_idx].set(update)
+            # Masked lanes route to an out-of-range index and are dropped
+            # by the scatter itself — redirecting them to a real address
+            # (e.g. 0) would make them *collide* with an active lane
+            # storing there and resurrect its pre-store value.
+            idx = jnp.asarray(np.where(amask, addr,
+                                       state.memory.shape[0]))
+            state.memory = state.memory.at[idx].set(
+                src.astype(state.memory.dtype), mode="drop")
             state.trace.append(TraceEvent(op, instr.dtype, elements, cbm,
                                           segments=segs,
                                           contiguous_run=run,

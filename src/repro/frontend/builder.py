@@ -467,14 +467,25 @@ class KernelBuilder:
         for h in handles:
             self._pinned.append(h.vreg)
 
-    def add(self, a, b, predicated: bool = False):
-        return self._binary(Op.ADD, a, b, predicated=predicated)
+    def add(self, a, b, predicated: bool = False,
+            in_place: bool = False):
+        return self._binary(Op.ADD, a, b, predicated=predicated,
+                            in_place=in_place)
 
-    def sub(self, a, b, predicated: bool = False):
-        return self._binary(Op.SUB, a, b, predicated=predicated)
+    def sub(self, a, b, predicated: bool = False,
+            in_place: bool = False):
+        return self._binary(Op.SUB, a, b, predicated=predicated,
+                            in_place=in_place)
 
-    def mul(self, a, b, predicated: bool = False):
-        return self._binary(Op.MUL, a, b, predicated=predicated)
+    def mul(self, a, b, predicated: bool = False,
+            in_place: bool = False):
+        """Predicated + in-place is the conditional-update idiom: lanes
+        whose Tag is clear keep the destination's previous value, which
+        only means something when the destination *is* an existing
+        register — the range-reduction loops in :mod:`repro.nn.ops`
+        (``s *= 0.5 where s >= 2``) are the motivating use."""
+        return self._binary(Op.MUL, a, b, predicated=predicated,
+                            in_place=in_place)
 
     def _compare(self, op: Op, a: VectorHandle, b) -> None:
         """Emit a comparison: writes the per-lane Tag predicate latch

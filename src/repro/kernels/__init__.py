@@ -8,5 +8,22 @@
 
 Each kernel has a pure-jnp oracle in ref.py; ops.py holds the jit'd
 dispatch wrappers the models call.
+
+Submodules import lazily (PEP 562, like :mod:`repro.core`): ``ref``
+holds only pure-jnp oracles and is what :mod:`repro.nn` validates
+against, while ``ops`` pulls in the Pallas TPU kernel modules — eager
+import here would drag the TPU lowering stack into CPU-only consumers.
 """
-from . import ops, ref  # noqa: F401
+_LAZY = {"ops", "ref", "mdgather", "mdscatter", "bitplane_gemm",
+         "flash_attention"}
+
+
+def __getattr__(name):
+    if name in _LAZY:
+        import importlib
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | _LAZY)

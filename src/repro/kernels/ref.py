@@ -82,6 +82,63 @@ def quantize_rowwise_ref(x: jnp.ndarray
 
 
 # ---------------------------------------------------------------------------
+# Model-block oracles for the repro.nn kernel zoo (docs/MODELS.md).
+# ---------------------------------------------------------------------------
+
+def tree_sum_ref(x: jnp.ndarray, axis: int = -1) -> jnp.ndarray:
+    """Pairwise (log-tree) summation along one power-of-two axis.
+
+    The MVE reduction idiom halves the dimension per step (Section IV),
+    so cross-dimension sums on the lane grid happen in *this* order, not
+    left-to-right.  Oracles that promise bit-exactness against a lane
+    reduction must mirror it — fp32 addition is not associative.
+    """
+    x = jnp.moveaxis(x, axis, -1)
+    n = x.shape[-1]
+    assert n & (n - 1) == 0, f"tree_sum_ref needs a power of two, got {n}"
+    while n > 1:
+        half = n // 2
+        x = x[..., :half] + x[..., half:n]
+        n = half
+    return x[..., 0]
+
+
+def ssm_scan_ref(h: jnp.ndarray, a: jnp.ndarray, bvec: jnp.ndarray,
+                 x: jnp.ndarray, c: jnp.ndarray
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One diagonal-SSM decode step (Mamba2/SSD-style state update).
+
+    ``h, a: (P, N)``; ``bvec, c: (N,)``; ``x: (P,)``.  Returns
+    ``(h_new, y)`` with ``h_new = a * h + bvec * x`` and
+    ``y[p] = sum_n c[n] * h_new[p, n]`` — the sum in pairwise-tree
+    order, and every multiply/add in the exact sequence the MVE block
+    kernel emits, so fp32 results match bit for bit.
+    """
+    h = h.astype(jnp.float32)
+    t = bvec.astype(jnp.float32)[None, :] * x.astype(jnp.float32)[:, None]
+    h_new = a.astype(jnp.float32) * h
+    h_new = h_new + t
+    y = tree_sum_ref(c.astype(jnp.float32)[None, :] * h_new, axis=-1)
+    return h_new, y
+
+
+def moe_gather_ref(w: jnp.ndarray, experts: jnp.ndarray,
+                   gates: jnp.ndarray) -> jnp.ndarray:
+    """Top-k expert gather: ``y[t] = sum_j gates[t, j] * w[experts[t, j]]``.
+
+    ``w: (E, D)`` expert rows, ``experts: (T, topk)`` int indices,
+    ``gates: (T, topk)`` fp32.  Accumulated j = 0..topk-1 in order
+    (matching the MVE random-base gather kernel), so fp32 is bit-exact.
+    """
+    t, topk = experts.shape
+    y = jnp.zeros((t, w.shape[1]), jnp.float32)
+    for j in range(topk):
+        rows = w.astype(jnp.float32)[experts[:, j]]
+        y = y + gates.astype(jnp.float32)[:, j][:, None] * rows
+    return y
+
+
+# ---------------------------------------------------------------------------
 # Flash attention (forward) — online softmax over kv blocks.
 # ---------------------------------------------------------------------------
 

@@ -123,19 +123,20 @@ def _geometry_groups(candidates: Sequence[Candidate]
     return groups
 
 
-def _evaluate(kernels: Sequence[Tuple[str, float]],
-              candidates: Sequence[Candidate]) -> List[EvalPoint]:
-    """Price every candidate as the (weighted) sum over ``kernels`` —
-    ``[(name, weight)]`` with weight 1.0 for a single kernel."""
+def _evaluate_items(items: Sequence[Tuple[object, float]],
+                    candidates: Sequence[Candidate]) -> List[EvalPoint]:
+    """Price every candidate as the weighted sum over ``items`` —
+    ``[(build_fn, weight)]`` where ``build_fn(geo_cfg)`` returns the
+    program to trace at that lane geometry."""
     points: List[EvalPoint] = []
     for (na, bl), group in sorted(_geometry_groups(candidates).items()):
         # compile once per lane geometry: the static trace is scheme- and
         # wordline-independent
         geo_cfg = MVEConfig(num_arrays=na, bitlines=bl)
         traces = []
-        for name, weight in kernels:
-            run = _make_run(name, geo_cfg)
-            cp = compile_program(run.program, geo_cfg, cache_tag="silicon")
+        for build, weight in items:
+            cp = compile_program(build(geo_cfg), geo_cfg,
+                                 cache_tag="silicon")
             traces.append((cp.static_trace, weight))
         for cand in group:
             cfg = cand.cfg()
@@ -154,6 +155,15 @@ def _evaluate(kernels: Sequence[Tuple[str, float]],
                 params_source=source))
     points.sort(key=lambda p: (p.cycles, p.energy_pj, p.area_mm2, p.label))
     return points
+
+
+def _evaluate(kernels: Sequence[Tuple[str, float]],
+              candidates: Sequence[Candidate]) -> List[EvalPoint]:
+    """Price every candidate as the (weighted) sum over ``kernels`` —
+    ``[(name, weight)]`` with weight 1.0 for a single kernel."""
+    items = [(lambda geo_cfg, n=name: _make_run(n, geo_cfg).program,
+              weight) for name, weight in kernels]
+    return _evaluate_items(items, candidates)
 
 
 def pareto_front(points: Iterable[EvalPoint]) -> Tuple[EvalPoint, ...]:
@@ -198,4 +208,27 @@ def autotune_stream(mix: Sequence[Tuple[str, int]],
     points = _evaluate(kernels, cands)
     label = f"stream[{'+'.join(name for name, _ in mix)}]"
     return AutotuneResult(workload=label, points=tuple(points),
+                          front=pareto_front(points))
+
+
+def autotune_programs(workload: str,
+                      programs: Sequence[Tuple[str, object, float]],
+                      candidates: Optional[Sequence[Candidate]] = None
+                      ) -> AutotuneResult:
+    """Search for a weighted mix of *already-built* programs — e.g. the
+    ``repro.nn`` model-block mix (``[(label, program_or_kernel,
+    weight)]``).  Block programs address fixed operand layouts, so the
+    same program prices on every candidate; all default candidates keep
+    ``lanes >= 8192``, the engine's full grid, so no block spills."""
+    cands = list(candidates) if candidates is not None \
+        else default_candidates()
+
+    def _program_of(p):
+        return p.program if hasattr(p, "program") and hasattr(p, "plan") \
+            else p
+
+    items = [(lambda geo_cfg, prog=_program_of(p): prog, float(w))
+             for _, p, w in programs]
+    points = _evaluate_items(items, cands)
+    return AutotuneResult(workload=workload, points=tuple(points),
                           front=pareto_front(points))

@@ -513,6 +513,61 @@ def test_cross_target_random_frontend_kernels(seed):
                           target_names=("mve-bs-timed", "rvv-1d-timed"))
 
 
+# ---------------------------------------------------------------------------
+# repro.nn model blocks join the equivalence class (docs/MODELS.md):
+# random-shape instances of every zoo family through interp == fused ==
+# VM == scheduler == every opt-pipeline prefix == timed envelope.
+# ---------------------------------------------------------------------------
+
+def _random_nn_block(seed: int):
+    """A randomly-shaped instance of one zoo block family (family cycles
+    with the seed so six seeds cover all six)."""
+    from repro import nn
+
+    rng = np.random.default_rng(seed)
+    family = seed % 6
+    if family == 0:
+        window = int(2 ** rng.integers(2, 4))
+        return nn.kv_gather(window=window, n_kv=int(rng.integers(1, 4)),
+                            head_dim=int(2 ** rng.integers(1, 4)),
+                            max_seq=2 * window,
+                            pos0=int(rng.integers(0, window)), seed=seed)
+    if family == 1:
+        window = int(2 ** rng.integers(2, 4))
+        return nn.kv_scatter(window=window, n_kv=int(rng.integers(1, 4)),
+                             head_dim=int(2 ** rng.integers(1, 4)),
+                             max_seq=2 * window,
+                             pos0=int(rng.integers(0, window)), seed=seed)
+    if family == 2:
+        chunk = int(2 ** rng.integers(1, 3))
+        return nn.attn_tile(tq=int(2 ** rng.integers(2, 4)),
+                            tk=chunk * int(rng.integers(1, 3)),
+                            d=int(2 ** rng.integers(1, 3)),
+                            chunk=chunk, seed=seed)
+    if family == 3:
+        return nn.gemm_tile(n=int(2 ** rng.integers(2, 5)),
+                            kdim=int(rng.integers(2, 5)),
+                            m=int(2 ** rng.integers(2, 5)), seed=seed)
+    if family == 4:
+        return nn.ssm_scan(n_state=int(2 ** rng.integers(2, 4)),
+                           d_inner=int(2 ** rng.integers(2, 5)), seed=seed)
+    return nn.moe_gather(tokens=int(2 ** rng.integers(2, 5)),
+                         d_expert=int(2 ** rng.integers(2, 4)),
+                         n_experts=int(2 ** rng.integers(1, 4)),
+                         topk=int(rng.integers(1, 4)), seed=seed)
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_conformance_random_nn_blocks(seed):
+    """Every zoo family, random shapes, full equivalence class — plus
+    the block's own jnp-oracle check on the oracle executor's result."""
+    run = _random_nn_block(seed)
+    mem0 = run.kernel.pack()
+    mem_i, st_i = ORACLE.run_stepwise(run.kernel.program, mem0)
+    run.check(np.asarray(mem_i), st_i)
+    _check_all_executors(run.kernel.program, [mem0])
+
+
 @pytest.mark.parametrize("seed", range(4))
 def test_timed_targets_envelope_random_programs(seed):
     """The full timed matrix: every timed target executes the fuzzer's

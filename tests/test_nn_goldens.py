@@ -1,0 +1,84 @@
+"""Frozen per-block cost rows for the repro.nn kernel zoo.
+
+Freezes, for every default-shape zoo block, the emitted program size,
+the register allocation, and the priced cycles/energy/instruction mix
+on ``mve-bs`` and ``rvv-1d`` — the two ends of the Fig. 10 comparison.
+A change to the frontend lowering, the optimizer default, a block
+kernel, or either cost model shows up here as an exact diff instead of
+an unexplained drift in the ``models`` bench section.
+
+Regenerating after an *intentional* change:
+
+    REPRO_REGEN_GOLDEN=1 PYTHONPATH=src python -m pytest -q \
+        tests/test_nn_goldens.py
+
+Float fields round-trip exactly through JSON (shortest-repr), so
+equality is exact, not approximate.
+"""
+import json
+import os
+import pathlib
+
+import numpy as np
+import pytest
+
+from repro import targets
+from repro.nn import BLOCK_KERNELS
+
+GOLDEN = pathlib.Path(__file__).parent / "data" / "nn_goldens.json"
+REGEN = bool(os.environ.get("REPRO_REGEN_GOLDEN"))
+_TARGETS = ("mve-bs", "rvv-1d")
+
+
+def _block_entry(name: str) -> dict:
+    run = BLOCK_KERNELS[name]()
+    entry = {
+        "instrs": len(run.kernel.program),
+        "n_regs": run.kernel.n_regs,
+        "max_live": run.kernel.max_live,
+        "exactness": run.exactness,
+    }
+    for tname in _TARGETS:
+        art = targets.compile(run.kernel, target=tname)
+        mem, state = art.run(run.memory)
+        run.check(np.asarray(mem), state)
+        tl = art.timeline(state)
+        mix = art.instruction_mix()
+        entry[tname] = {
+            "cycles": tl.total_cycles,
+            "energy_pj": art.energy(state).total_pj,
+            "vector_instructions": mix.vector,
+            "scalar_instructions": mix.scalar,
+        }
+    return entry
+
+
+def _current() -> dict:
+    return {"blocks": {n: _block_entry(n) for n in sorted(BLOCK_KERNELS)}}
+
+
+@pytest.fixture(scope="module")
+def golden():
+    if REGEN:
+        GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+        GOLDEN.write_text(json.dumps(_current(), indent=1, sort_keys=True))
+    assert GOLDEN.exists(), \
+        "golden file missing - regenerate with REPRO_REGEN_GOLDEN=1"
+    return json.loads(GOLDEN.read_text())
+
+
+@pytest.mark.parametrize("name", sorted(BLOCK_KERNELS))
+def test_block_rows_frozen(golden, name):
+    """Exact program size + per-target cycle/energy rows per block."""
+    assert _block_entry(name) == golden["blocks"][name], \
+        f"{name}: cost rows drifted"
+
+
+def test_golden_covers_all_blocks(golden):
+    assert sorted(golden["blocks"]) == sorted(BLOCK_KERNELS)
+    for name, entry in golden["blocks"].items():
+        assert entry["n_regs"] <= 8            # the width-32 register file
+        # MVE must price fewer vector instructions than sliced RVV on
+        # every block (the instruction-count story of Fig. 10)
+        assert entry["mve-bs"]["vector_instructions"] < \
+            entry["rvv-1d"]["vector_instructions"], name
